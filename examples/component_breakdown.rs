@@ -1,0 +1,65 @@
+//! Figure 6 reproduction: average epoch time and per-batch component
+//! breakdown (getComputeGraph / GNNmodel / sync+step) as the trainer
+//! count grows, on the citation tier — plus the negative-sampling
+//! ablation the paper motivates in §3.3.1 (local constraint-based vs
+//! global sampling with simulated remote fetches).
+//!
+//! Run: `make artifacts && cargo run --release --example component_breakdown -- [epochs]`
+
+use kgscale::config::ExperimentConfig;
+use kgscale::experiments;
+use kgscale::model::Manifest;
+use kgscale::report::{save_report, Table};
+use kgscale::runtime::Runtime;
+use kgscale::train::Trainer;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let epochs: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let cfg = ExperimentConfig::from_file("configs/citemini.toml")?;
+    let graph = experiments::dataset(&cfg);
+    let dir = Path::new("artifacts/citemini");
+    let manifest = Manifest::load(dir)?;
+    let runtime = Runtime::new(dir)?;
+
+    let (_, rows) = experiments::table3_sweep(
+        &cfg, &graph, &runtime, &manifest, &[1, 2, 4, 8], epochs, 0, 100,
+    )?;
+    let (f6a, f6b) = experiments::fig6(&rows, &graph.name);
+    println!("{}", f6a.to_ascii());
+    println!("{}", f6b.to_markdown());
+
+    // Ablation: constraint-based local negatives vs global negatives.
+    // Global sampling charges one simulated remote fetch per
+    // out-of-partition draw (the traffic the paper's design eliminates).
+    let mut ab = Table::new(
+        "Ablation: negative sampling scope (4 trainers)",
+        &["scope", "epoch time (virtual)", "remote fetches/epoch", "final loss"],
+    );
+    for (label, local) in [("local constraint-based (paper)", true), ("global", false)] {
+        let mut c = cfg.clone();
+        c.train.num_trainers = 4;
+        c.train.local_negatives = local;
+        let mut t = Trainer::new(c, &graph, &runtime, manifest.clone())?;
+        let mut last = None;
+        for _ in 0..epochs {
+            last = Some(t.train_epoch()?);
+        }
+        let rec = last.unwrap();
+        ab.row(vec![
+            label.into(),
+            format!("{:.3}s", rec.virtual_secs),
+            rec.remote_fetches.to_string(),
+            format!("{:.4}", rec.mean_loss),
+        ]);
+        println!("{label}: done");
+    }
+    println!("{}", ab.to_markdown());
+
+    let mut out = f6a.to_csv();
+    out.push_str(&f6b.to_markdown());
+    out.push_str(&ab.to_markdown());
+    let path = save_report("component_breakdown.md", &out)?;
+    println!("saved {path:?}");
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! Tables 1-2 + Figure 2 at multiple scales, plus the Table 5 partition
+//! statistics — everything about partition quality that needs no XLA.
+//!
+//! Includes the paper-scale `fb-syn` (14,541 entities / 272k edges,
+//! FB15k-237's exact shape) and a 100k-vertex citation graph: partition
+//! statistics are cheap even where training is not, so the RF trends of
+//! the paper's Table 2 are reproduced at full scale here.
+//!
+//! Run: `cargo run --release --example partition_study`
+
+use kgscale::config::{DatasetConfig, DatasetKind, ExperimentConfig, PartitionStrategy};
+use kgscale::experiments;
+use kgscale::graph::generator;
+use kgscale::partition::{self, stats as pstats};
+use kgscale::report::{save_report, Table};
+
+fn main() -> anyhow::Result<()> {
+    let mut out = String::new();
+
+    // Paper-scale FB15k-237 stand-in (Table 1/2 left column).
+    let fb_syn = DatasetConfig {
+        name: "fb-syn (FB15k-237 scale)".into(),
+        kind: DatasetKind::ZipfKg,
+        entities: 14_541,
+        relations: 237,
+        train_edges: 272_115,
+        valid_edges: 17_535,
+        test_edges: 20_466,
+        feature_dim: 0,
+        zipf_exponent: 1.1,
+        seed: 42,
+    };
+    // Larger citation-style graph (Table 1/2 right column, scaled 1:30).
+    let cite_syn = DatasetConfig {
+        name: "cite-syn (citation2 / 30)".into(),
+        kind: DatasetKind::Citation,
+        entities: 100_000,
+        relations: 1,
+        train_edges: 1_000_000,
+        valid_edges: 3_000,
+        test_edges: 3_000,
+        feature_dim: 0, // features irrelevant for partition stats
+        zipf_exponent: 1.0,
+        seed: 42,
+    };
+
+    println!("generating fb-syn...");
+    let g_fb = generator::generate(&fb_syn);
+    println!("generating cite-syn...");
+    let g_cite = generator::generate(&cite_syn);
+
+    out.push_str(&experiments::table1(&[&g_fb, &g_cite]).to_markdown());
+
+    // Table 2: HDRF + 2-hop NE across partition counts, both datasets.
+    let cfg = ExperimentConfig::tiny(); // partition params only
+    for g in [&g_fb, &g_cite] {
+        let t = experiments::table2(&cfg, g, &[2, 4, 8]);
+        out.push_str(&t.to_markdown());
+    }
+
+    // Table 5 statistics (partitioner comparison at P=4) on cite-syn.
+    let mut t5 = Table::new(
+        "Table 5 (stats): partitioning strategies, 4 partitions, cite-syn",
+        &["Partitioning", "# core edges", "# total edges", "RF", "core-RF", "balance"],
+    );
+    for (label, strategy) in [
+        ("HDRF+NE (KaHIP-sub)", PartitionStrategy::Hdrf),
+        ("DBH+NE", PartitionStrategy::Dbh),
+        ("Greedy-VP+NE (Metis-sub)", PartitionStrategy::MetisLike),
+        ("Random+NE", PartitionStrategy::Random),
+    ] {
+        let pcfg = kgscale::config::PartitionConfig {
+            strategy,
+            num_partitions: 4,
+            hops: 2,
+            hdrf_lambda: 1.0,
+        };
+        let parts = partition::partition_graph(&g_cite, &pcfg, 42);
+        let s = pstats::compute(&parts, g_cite.num_entities);
+        t5.row(vec![
+            label.into(),
+            s.core_cell(),
+            s.total_cell(),
+            format!("{:.2}", s.replication_factor),
+            format!("{:.2}", s.core_replication_factor),
+            format!("{:.2}", s.balance_ratio),
+        ]);
+        println!("{label}: done");
+    }
+    out.push_str(&t5.to_markdown());
+
+    // Figure 2: avg vertices per n-hop embedding on the citation graph.
+    let fig = experiments::fig2(&cfg, &g_cite, 3);
+    out.push_str(&fig.to_ascii());
+    out.push_str(&fig.to_csv());
+
+    println!("{out}");
+    let path = save_report("partition_study.md", &out)?;
+    println!("saved {path:?}");
+    Ok(())
+}

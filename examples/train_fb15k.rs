@@ -1,0 +1,40 @@
+//! Table 3 (left) reproduction: distributed full-edge-batch training on
+//! the FB15k-237 stand-in (`fbmini`), sweeping 1/2/4/8 trainers and
+//! reporting MRR / Hits@1 / epoch time / speedup.
+//!
+//! This is the paper's accuracy-parity experiment: distributed training
+//! with constraint-based local negatives must match non-distributed MRR.
+//!
+//! Run: `make artifacts && cargo run --release --example train_fb15k -- [epochs]`
+
+use kgscale::config::ExperimentConfig;
+use kgscale::experiments;
+use kgscale::model::Manifest;
+use kgscale::report::save_report;
+use kgscale::runtime::Runtime;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let epochs: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let cfg = ExperimentConfig::from_file("configs/fbmini.toml")?;
+    let graph = experiments::dataset(&cfg);
+    let dir = Path::new("artifacts/fbmini");
+    let manifest = Manifest::load(dir)?;
+    let runtime = Runtime::new(dir)?;
+
+    println!("{}", experiments::table1(&[&graph]).to_markdown());
+    println!("{}", experiments::table2(&cfg, &graph, &[2, 4, 8]).to_markdown());
+
+    let (t3, rows) = experiments::table3_sweep(
+        &cfg, &graph, &runtime, &manifest, &[1, 2, 4, 8], epochs, 0, 400,
+    )?;
+    println!("{}", t3.to_markdown());
+    let (f6a, f6b) = experiments::fig6(&rows, &graph.name);
+    println!("{}", f6b.to_markdown());
+    let mut out = t3.to_markdown();
+    out.push_str(&f6a.to_csv());
+    out.push_str(&f6b.to_markdown());
+    let path = save_report("train_fb15k.md", &out)?;
+    println!("saved {path:?}");
+    Ok(())
+}

@@ -1,0 +1,209 @@
+"""AOT compiler: lower the L2 entry points to HLO *text* artifacts.
+
+Usage:
+    python -m compile.aot --plan <plan.json> --out <artifacts/dir>
+
+The plan file is produced by ``kgscale plan`` (Rust), which partitions the
+dataset and measures the exact padded sizes every trainer configuration
+needs (compute-graph node/edge/triple maxima rounded up to kernel block
+multiples). This file only lowers what the plan asks for and writes:
+
+    <out>/train_step_n{N}_e{E}_b{B}.hlo.txt     (one per bucket)
+    <out>/encode_n{N}_e{E}.hlo.txt
+    <out>/score_q{Q}_n{N}.hlo.txt
+    <out>/manifest.json                          (shapes + param layout)
+
+Interchange is HLO text, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+
+Skips lowering when the artifact already exists and is newer than this
+package's sources, so ``make artifacts`` is an incremental no-op.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ModelSpec, make_encode, make_score, make_train_step
+from .model import param_count, param_specs
+
+# Kernel block sizes (keep in sync with kernels/*.py defaults): padded E
+# must be a multiple of EDGE_BLOCK, padded B of TRIPLE_BLOCK (or smaller
+# than one block).
+EDGE_BLOCK = 512
+TRIPLE_BLOCK = 1024
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def node_input_sds(spec: ModelSpec, n: int):
+    if spec.mode == "embedding":
+        return _sds((n,), jnp.int32)
+    return _sds((n, spec.feature_dim), jnp.float32)
+
+
+def lower_train_step(spec: ModelSpec, n: int, e: int, b: int) -> str:
+    fn = make_train_step(spec)
+    p = param_count(spec)
+    lowered = jax.jit(fn, keep_unused=True).lower(
+        _sds((p,), jnp.float32),              # flat params
+        node_input_sds(spec, n),              # node ids / features
+        _sds((e,), jnp.int32),                # src
+        _sds((e,), jnp.int32),                # dst
+        _sds((e,), jnp.int32),                # rel (with inverse offset)
+        _sds((e,), jnp.float32),              # edge_mask
+        _sds((b,), jnp.int32),                # ts
+        _sds((b,), jnp.int32),                # tr
+        _sds((b,), jnp.int32),                # tt
+        _sds((b,), jnp.float32),              # labels
+        _sds((b,), jnp.float32),              # triple mask
+        _sds((), jnp.int32),                  # dropout seed
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_encode(spec: ModelSpec, n: int, e: int) -> str:
+    fn = make_encode(spec)
+    p = param_count(spec)
+    lowered = jax.jit(fn, keep_unused=True).lower(
+        _sds((p,), jnp.float32),
+        node_input_sds(spec, n),
+        _sds((e,), jnp.int32),
+        _sds((e,), jnp.int32),
+        _sds((e,), jnp.int32),
+        _sds((e,), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_score(spec: ModelSpec, q: int, n: int) -> str:
+    fn = make_score(spec)
+    lowered = jax.jit(fn, keep_unused=True).lower(
+        _sds((n, spec.embed_dim), jnp.float32),
+        _sds((spec.relations * spec.embed_dim,), jnp.float32),
+        _sds((q,), jnp.int32),
+        _sds((q,), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def check_bucket(n: int, e: int, b: int) -> None:
+    assert e % EDGE_BLOCK == 0 or e < EDGE_BLOCK, \
+        f"edges {e} not a multiple of {EDGE_BLOCK}"
+    assert b % TRIPLE_BLOCK == 0 or b < TRIPLE_BLOCK, \
+        f"triples {b} not a multiple of {TRIPLE_BLOCK}"
+    assert n > 0 and e > 0 and b > 0
+
+
+def sources_mtime() -> float:
+    pkg = os.path.dirname(os.path.abspath(__file__))
+    newest = 0.0
+    for root, _, files in os.walk(pkg):
+        for f in files:
+            if f.endswith(".py"):
+                newest = max(newest, os.path.getmtime(os.path.join(root, f)))
+    return newest
+
+
+def emit(path: str, produce, stale_after: float, force: bool) -> bool:
+    """Write `produce()` to path unless it is already fresh."""
+    if (not force and os.path.exists(path)
+            and os.path.getmtime(path) >= stale_after):
+        print(f"  fresh    {os.path.basename(path)}")
+        return False
+    text = produce()
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  lowered  {os.path.basename(path)} ({len(text) / 1e6:.2f} MB)")
+    return True
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--plan", required=True, help="plan JSON from `kgscale plan`")
+    ap.add_argument("--out", required=True, help="artifact output directory")
+    ap.add_argument("--force", action="store_true", help="re-lower everything")
+    args = ap.parse_args()
+
+    with open(args.plan) as f:
+        plan = json.load(f)
+    spec = ModelSpec.from_dict(plan)
+    os.makedirs(args.out, exist_ok=True)
+    stale_after = max(sources_mtime(), os.path.getmtime(args.plan))
+
+    entries = []
+    print(f"[aot] {spec.name}: mode={spec.mode} d={spec.embed_dim} "
+          f"NB={spec.num_bases} L={spec.num_layers} "
+          f"params={param_count(spec)}")
+
+    for n, e, b in plan["train_buckets"]:
+        check_bucket(n, e, b)
+        fname = f"train_step_n{n}_e{e}_b{b}.hlo.txt"
+        emit(os.path.join(args.out, fname),
+             lambda n=n, e=e, b=b: lower_train_step(spec, n, e, b),
+             stale_after, args.force)
+        entries.append({"kind": "train_step", "file": fname,
+                        "nodes": n, "edges": e, "triples": b})
+
+    enc_n, enc_e = plan["encode"]
+    check_bucket(enc_n, enc_e, 1)
+    fname = f"encode_n{enc_n}_e{enc_e}.hlo.txt"
+    emit(os.path.join(args.out, fname),
+         lambda: lower_encode(spec, enc_n, enc_e), stale_after, args.force)
+    entries.append({"kind": "encode", "file": fname,
+                    "nodes": enc_n, "edges": enc_e})
+
+    q = int(plan["score_queries"])
+    fname = f"score_q{q}_n{enc_n}.hlo.txt"
+    emit(os.path.join(args.out, fname),
+         lambda: lower_score(spec, q, enc_n), stale_after, args.force)
+    entries.append({"kind": "score", "file": fname,
+                    "queries": q, "nodes": enc_n})
+
+    manifest = {
+        "version": 1,
+        "name": spec.name,
+        "mode": spec.mode,
+        "model": {
+            "entities": spec.entities,
+            "relations": spec.relations,
+            "embed_dim": spec.embed_dim,
+            "num_bases": spec.num_bases,
+            "num_layers": spec.num_layers,
+            "feature_dim": spec.feature_dim,
+            "dropout": spec.dropout,
+        },
+        "param_count": param_count(spec),
+        "params": [
+            {"name": ps.name, "shape": list(ps.shape), "offset": ps.offset,
+             "size": ps.size, "init": ps.init,
+             "fan_in": ps.fan_in, "fan_out": ps.fan_out}
+            for ps in param_specs(spec)
+        ],
+        "entries": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[aot] wrote manifest with {len(entries)} entries -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

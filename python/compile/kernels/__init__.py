@@ -1,0 +1,21 @@
+"""L1: Pallas kernels for the paper's compute hot spots.
+
+`rgcn_basis.rgcn_basis_message` — the RGCN relation-specific message
+transform restructured as basis-count dense matmuls (MXU-shaped);
+`distmult.distmult_score` — fused DistMult triple scoring. Both are
+checked against the pure-jnp oracles in `ref` by python/tests.
+"""
+
+from .distmult import distmult_score
+from .ref import distmult_score_ref, rgcn_basis_message_ref
+from .rgcn_basis import rgcn_basis_message
+from .rgcn_combine import rgcn_basis_combine, rgcn_basis_combine_ref
+
+__all__ = [
+    "distmult_score",
+    "distmult_score_ref",
+    "rgcn_basis_combine",
+    "rgcn_basis_combine_ref",
+    "rgcn_basis_message",
+    "rgcn_basis_message_ref",
+]

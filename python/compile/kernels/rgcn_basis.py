@@ -1,0 +1,135 @@
+"""L1 Pallas kernel: basis-decomposed relational message transform.
+
+The RGCN hot spot is the per-edge relation-specific transform
+``msg[e] = W_{r(e)} @ h[src(e)]``. Materializing a [d, d] matrix per edge
+is hostile to any matrix unit; the basis decomposition (paper Eq. 2,
+``W_r = sum_b a_{rb} V_b``) lets us restructure it as NB *dense* matmuls
+over the edge dimension followed by a coefficient-weighted sum:
+
+    msg = sum_b coeff[:, b:b+1] * (h_src @ V_b)          # [E, d]
+
+which is exactly MXU-shaped work (an [E_blk, d] x [d, d] matmul per basis
+per tile). This module is the TPU re-think of the paper's P100 kernels —
+see DESIGN.md §Hardware-Adaptation.
+
+TPU mapping (estimated in EXPERIMENTS.md §Perf; interpret=True on CPU):
+  * grid over E: each program owns an [E_BLK, d] tile of h_src/coeff/out
+    resident in VMEM via BlockSpec;
+  * the basis stack [NB, d, d] is small (NB*d*d*4 bytes; ≤ 64 KiB for
+    d=64, NB=4) and is broadcast to every program (index_map -> block 0);
+  * per-tile VMEM = (3*E_BLK*d + NB*d*d + E_BLK*NB) * 4 bytes — E_BLK=512,
+    d=64, NB=4 gives ~480 KiB, comfortably under a ~16 MiB VMEM budget,
+    leaving room for double buffering;
+  * the inner matmul runs on the MXU with f32 accumulation
+    (preferred_element_type), so bf16 inputs are safe.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default edge-tile size. Multiple of 8 (f32 sublane) and large enough to
+# keep the MXU busy; callers pad E to a multiple of the block.
+DEFAULT_BLOCK_E = 512
+
+
+def _kernel(h_src_ref, basis_ref, coeff_ref, out_ref):
+    """One [E_BLK, d] tile: out = sum_b coeff[:, b] * (h_src @ basis[b])."""
+    h = h_src_ref[...]                      # [E_BLK, d]
+    nb = basis_ref.shape[0]
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for b in range(nb):                     # NB is small + static: unrolled
+        prod = jax.lax.dot_general(
+            h, basis_ref[b],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                   # [E_BLK, d] on the MXU
+        acc = acc + coeff_ref[:, b][:, None].astype(jnp.float32) * prod
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _forward(h_src, basis, coeff, block_e, interpret):
+    """Raw pallas_call wrapper (no AD)."""
+    e, d = h_src.shape
+    nb = basis.shape[0]
+    assert basis.shape == (nb, d, d), f"basis shape {basis.shape}"
+    assert coeff.shape == (e, nb), f"coeff shape {coeff.shape}"
+    blk = min(block_e, e)
+    assert e % blk == 0, f"E={e} must be a multiple of block_e={blk}"
+    grid = (e // blk,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),        # h_src tile
+            pl.BlockSpec((nb, d, d), lambda i: (0, 0, 0)),   # basis: bcast
+            pl.BlockSpec((blk, nb), lambda i: (i, 0)),       # coeff tile
+        ],
+        out_specs=pl.BlockSpec((blk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, d), h_src.dtype),
+        interpret=interpret,
+    )(h_src, basis, coeff)
+
+
+# pallas_call under interpret=True has no reverse-mode rule, so the VJP is
+# supplied explicitly. With out = sum_b c_b * (h @ V_b) and cotangent g:
+#   dh = sum_b c_b * (g @ V_b^T)      -> the SAME kernel, transposed basis
+#   dV_b = h^T @ (c_b * g)            -> NB dense [d,E]x[E,d] matmuls
+#   dc[:, b] = sum_j g * (h @ V_b)    -> NB dense matmuls + row reduction
+# dh (the big term, [E, d]) reuses the Pallas kernel; the parameter-sized
+# terms are left to XLA which fuses them into the surrounding graph.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _message(h_src, basis, coeff, block_e, interpret):
+    return _forward(h_src, basis, coeff, block_e, interpret)
+
+
+def _message_fwd(h_src, basis, coeff, block_e, interpret):
+    return _forward(h_src, basis, coeff, block_e, interpret), (h_src, basis, coeff)
+
+
+def _message_bwd(block_e, interpret, residuals, g):
+    h_src, basis, coeff = residuals
+    basis_t = jnp.swapaxes(basis, 1, 2)
+    dh = _forward(g, basis_t, coeff, block_e, interpret)
+    # dV[b] = h^T @ (g * c[:, b, None]); batched over b via einsum.
+    dbasis = jnp.einsum("ei,eb,ej->bij", h_src, coeff, g,
+                        preferred_element_type=jnp.float32).astype(basis.dtype)
+    # dc[e, b] = <g[e], h[e] @ V_b>
+    hv = jnp.einsum("ei,bij->ebj", h_src, basis,
+                    preferred_element_type=jnp.float32)
+    dcoeff = jnp.einsum("ebj,ej->eb", hv, g).astype(coeff.dtype)
+    return dh, dbasis, dcoeff
+
+
+_message.defvjp(_message_fwd, _message_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def rgcn_basis_message(h_src: jnp.ndarray, basis: jnp.ndarray,
+                       coeff: jnp.ndarray, *, block_e: int = DEFAULT_BLOCK_E,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Per-edge basis-decomposed messages; see module docstring.
+
+    Args:
+      h_src: [E, d] source hidden states (E must divide by block_e, or be
+        smaller than one block).
+      basis: [NB, d, d] basis matrices.
+      coeff: [E, NB] per-edge coefficients.
+      block_e: edge-tile size.
+      interpret: lower via the Pallas interpreter (required for CPU PJRT —
+        real TPU lowering emits Mosaic custom-calls the CPU cannot run).
+
+    Returns:
+      [E, d] messages, dtype of h_src. Differentiable (custom VJP).
+    """
+    return _message(h_src, basis, coeff, block_e, interpret)
+
+
+def vmem_bytes(block_e: int, d: int, nb: int, dtype_bytes: int = 4) -> int:
+    """Estimated per-program VMEM residency — used by the §Perf report."""
+    return dtype_bytes * (2 * block_e * d        # h_src tile + out tile
+                          + nb * d * d           # basis stack
+                          + block_e * nb         # coeff tile
+                          + block_e * d)         # f32 accumulator

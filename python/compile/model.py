@@ -1,0 +1,311 @@
+"""L2: the paper's model as a JAX computation — RGCN encoder (basis
+decomposition, Eq. 1-2) + DistMult decoder (Eq. 4) + binary cross-entropy
+over sampled negatives (Eq. 3), with ``jax.grad`` providing the backward
+pass. Calls the L1 Pallas kernels for the two hot spots.
+
+Everything here is *build-time only*: ``aot.py`` lowers the entry points
+built by :func:`make_train_step`, :func:`make_encode` and
+:func:`make_score` to HLO text once; the Rust coordinator executes those
+artifacts and never imports Python.
+
+Parameter handling: all parameters live in one flat f32 vector whose
+layout (:func:`param_specs`) is exported in the artifact manifest. The
+Rust side owns the vector (init, Adam step, AllReduce); entry points take
+it as their first input and gradients come back in the same layout, so
+L3 never needs to understand model structure.
+
+Shape/padding contract with L3 (see rust/src/model):
+  * nodes, edges, and triples are padded to the entry's static sizes;
+  * pad edges have ``edge_mask == 0`` and point at node 0;
+  * pad triples have ``triple_mask == 0`` and index node 0;
+  * ``train_step`` returns the *sum* of per-triple losses and the
+    gradients of that sum — the trainer divides by the global triple
+    count after AllReduce, which makes distributed gradients exactly
+    equal to single-worker full-batch gradients (§2.2's mathematical
+    equivalence).
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (distmult_score, distmult_score_ref,
+                      rgcn_basis_combine, rgcn_basis_combine_ref,
+                      rgcn_basis_message, rgcn_basis_message_ref)
+
+# Aggregate-then-transform (EXPERIMENTS.md §Perf iteration 1): hoist the
+# basis matmuls after the (linear) mean aggregation, cutting the message
+# transform from E·NB·d² to N·NB·d² FLOPs. Both paths are kept — tests
+# assert they agree — and AOT lowers the fused one.
+FUSED_AGGREGATION = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static model hyperparameters (mirrors rust config::ModelConfig)."""
+    name: str
+    mode: str                 # "embedding" | "provided"
+    entities: int             # total entities N_total (embedding table rows)
+    relations: int            # base relation count R (decoder rows)
+    embed_dim: int            # d
+    num_bases: int            # NB
+    num_layers: int           # L (= partition hops)
+    feature_dim: int          # F (provided mode only)
+    dropout: float
+
+    @property
+    def msg_relations(self) -> int:
+        """Relations seen by message passing: forward + inverse."""
+        return 2 * self.relations
+
+    @staticmethod
+    def from_dict(d: dict) -> "ModelSpec":
+        return ModelSpec(
+            name=d["name"], mode=d["mode"], entities=int(d["entities"]),
+            relations=int(d["relations"]), embed_dim=int(d["embed_dim"]),
+            num_bases=int(d["num_bases"]), num_layers=int(d["num_layers"]),
+            feature_dim=int(d.get("feature_dim", 0)),
+            dropout=float(d.get("dropout", 0.0)),
+        )
+
+
+# --------------------------------------------------------------------------
+# Parameter layout
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+    init: str        # "xavier_uniform" | "zeros"
+    fan_in: int
+    fan_out: int
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def param_specs(spec: ModelSpec) -> List[ParamSpec]:
+    """The flat-vector layout. Order is the contract with Rust: never
+    reorder without bumping the manifest version."""
+    out: List[ParamSpec] = []
+    off = 0
+
+    def add(name, shape, init="xavier_uniform", fan=None):
+        nonlocal off
+        fan_in, fan_out = fan if fan else (
+            shape[-2] if len(shape) >= 2 else shape[-1], shape[-1])
+        ps = ParamSpec(name, tuple(shape), off, init, fan_in, fan_out)
+        out.append(ps)
+        off += ps.size
+
+    d = spec.embed_dim
+    if spec.mode == "embedding":
+        add("ent_emb", (spec.entities, d), fan=(d, d))
+    else:
+        add("proj_w", (spec.feature_dim, d))
+        add("proj_b", (d,), init="zeros")
+    for layer in range(spec.num_layers):
+        add(f"basis_{layer}", (spec.num_bases, d, d), fan=(d, d))
+        add(f"coeff_{layer}", (spec.msg_relations, spec.num_bases),
+            fan=(spec.num_bases, spec.num_bases))
+        add(f"self_w_{layer}", (d, d))
+        add(f"bias_{layer}", (d,), init="zeros")
+    add("rel_dec", (spec.relations, d), fan=(d, d))
+    return out
+
+
+def param_count(spec: ModelSpec) -> int:
+    specs = param_specs(spec)
+    return specs[-1].offset + specs[-1].size
+
+
+def unflatten(spec: ModelSpec, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Slice the flat vector into named parameter arrays (differentiable)."""
+    params = {}
+    for ps in param_specs(spec):
+        params[ps.name] = jax.lax.dynamic_slice_in_dim(
+            flat, ps.offset, ps.size).reshape(ps.shape)
+    return params
+
+
+def init_params(spec: ModelSpec, key: jax.Array) -> jnp.ndarray:
+    """Python-side initializer — used by tests; Rust re-implements this
+    from the manifest (same distribution family, its own RNG)."""
+    chunks = []
+    for ps in param_specs(spec):
+        key, sub = jax.random.split(key)
+        if ps.init == "zeros":
+            chunks.append(jnp.zeros(ps.size, jnp.float32))
+        else:
+            limit = (6.0 / (ps.fan_in + ps.fan_out)) ** 0.5
+            chunks.append(jax.random.uniform(
+                sub, (ps.size,), jnp.float32, -limit, limit))
+    return jnp.concatenate(chunks)
+
+
+# --------------------------------------------------------------------------
+# Encoder / decoder
+# --------------------------------------------------------------------------
+
+def _segment_sum(data: jnp.ndarray, segment_ids: jnp.ndarray,
+                 num_segments: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def encoder(spec: ModelSpec, params: Dict[str, jnp.ndarray],
+            node_input: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+            rel: jnp.ndarray, edge_mask: jnp.ndarray, *,
+            dropout_key=None, use_pallas: bool = True,
+            fused: bool = FUSED_AGGREGATION) -> jnp.ndarray:
+    """L-layer RGCN over a (padded) compute graph.
+
+    node_input: [N] int32 global entity ids (embedding mode) or
+                [N, F] f32 features (provided mode).
+    src/dst/rel: [E] int32 message edges in cg-local ids; rel already
+                 includes the +R inverse offset.
+    edge_mask:   [E] f32, 0.0 for padding.
+
+    Returns [N, d] final hidden states.
+    """
+    msg_fn = rgcn_basis_message if use_pallas else rgcn_basis_message_ref
+    if spec.mode == "embedding":
+        h = params["ent_emb"][node_input]                     # [N, d]
+    else:
+        h = node_input @ params["proj_w"] + params["proj_b"]  # [N, d]
+    n = h.shape[0]
+
+    # Mean aggregation: 1/|N(v)| with padding excluded (paper Eq. 1, Agg
+    # = MEAN). deg counts real in-messages per node.
+    deg = _segment_sum(edge_mask, dst, n)                     # [N]
+    inv_deg = jnp.where(deg > 0, 1.0 / jnp.maximum(deg, 1.0), 0.0)[:, None]
+
+    combine_fn = rgcn_basis_combine if use_pallas else rgcn_basis_combine_ref
+
+    for layer in range(spec.num_layers):
+        basis = params[f"basis_{layer}"]                      # [NB, d, d]
+        coeff_tab = params[f"coeff_{layer}"]                  # [2R, NB]
+        h_src = h[src]                                        # [E, d]
+        coeff = coeff_tab[rel]                                # [E, NB]
+        if fused:
+            # Aggregate-then-transform: weighted per-basis segment sums
+            # (E·NB·d mults, XLA scatter-add) then one N-proportional
+            # basis combine on the matrix unit.
+            weighted = (h_src[:, None, :]
+                        * (coeff * edge_mask[:, None])[:, :, None])  # [E, NB, d]
+            agg_b = _segment_sum(weighted, dst, n)            # [N, NB, d]
+            agg_b = jnp.swapaxes(agg_b, 0, 1)                 # [NB, N, d]
+            agg = combine_fn(agg_b, basis) * inv_deg          # [N, d]
+        else:
+            msg = msg_fn(h_src, basis, coeff)                 # [E, d]
+            msg = msg * edge_mask[:, None]
+            agg = _segment_sum(msg, dst, n) * inv_deg         # [N, d]
+        h_new = agg + h @ params[f"self_w_{layer}"] + params[f"bias_{layer}"]
+        if layer + 1 < spec.num_layers:
+            h_new = jax.nn.relu(h_new)
+        if dropout_key is not None and spec.dropout > 0.0:
+            keep = 1.0 - spec.dropout
+            mask = jax.random.bernoulli(
+                jax.random.fold_in(dropout_key, layer), keep, h_new.shape)
+            h_new = jnp.where(mask, h_new / keep, 0.0)
+        h = h_new
+    return h
+
+
+def decoder(spec: ModelSpec, params: Dict[str, jnp.ndarray], h: jnp.ndarray,
+            ts: jnp.ndarray, tr: jnp.ndarray, tt: jnp.ndarray, *,
+            use_pallas: bool = True) -> jnp.ndarray:
+    """DistMult logits for a batch of (padded) triples."""
+    score_fn = distmult_score if use_pallas else distmult_score_ref
+    hs = h[ts]                                # [B, d]
+    wr = params["rel_dec"][tr]                # [B, d]
+    ht = h[tt]                                # [B, d]
+    return score_fn(hs, wr, ht)               # [B]
+
+
+def bce_loss_sum(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable summed binary cross-entropy (Eq. 3 numerator)."""
+    per = jnp.maximum(logits, 0.0) - logits * labels + jnp.log1p(
+        jnp.exp(-jnp.abs(logits)))
+    return jnp.sum(per * mask)
+
+
+# --------------------------------------------------------------------------
+# AOT entry points
+# --------------------------------------------------------------------------
+
+def make_train_step(spec: ModelSpec, *, use_pallas: bool = True):
+    """Build train_step(flat_params, node_input, src, dst, rel, edge_mask,
+    ts, tr, tt, labels, tmask, seed) -> (sum_loss, grads_flat)."""
+
+    def loss_fn(flat, node_input, src, dst, rel, edge_mask,
+                ts, tr, tt, labels, tmask, seed):
+        params = unflatten(spec, flat)
+        dropout_key = (jax.random.PRNGKey(seed)
+                       if spec.dropout > 0.0 else None)
+        h = encoder(spec, params, node_input, src, dst, rel, edge_mask,
+                    dropout_key=dropout_key, use_pallas=use_pallas)
+        logits = decoder(spec, params, h, ts, tr, tt, use_pallas=use_pallas)
+        return bce_loss_sum(logits, labels, tmask)
+
+    def train_step(flat, node_input, src, dst, rel, edge_mask,
+                   ts, tr, tt, labels, tmask, seed):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            flat, node_input, src, dst, rel, edge_mask,
+            ts, tr, tt, labels, tmask, seed)
+        return loss, grads
+
+    return train_step
+
+
+def make_encode(spec: ModelSpec, *, use_pallas: bool = True):
+    """Build encode(flat_params, node_input, src, dst, rel, edge_mask)
+    -> h [N, d]; dropout disabled (inference)."""
+
+    def encode(flat, node_input, src, dst, rel, edge_mask):
+        params = unflatten(spec, flat)
+        return encoder(spec, params, node_input, src, dst, rel, edge_mask,
+                       dropout_key=None, use_pallas=use_pallas)
+
+    return encode
+
+
+def make_score(spec: ModelSpec, *, use_pallas: bool = True):
+    """Build score(h, rel_dec_flat, s_idx, r_idx) -> [Q, N] ranking scores.
+
+    scores[q, c] = <h[s_idx[q]] * rel[r_idx[q]], h[c]> — DistMult against
+    every candidate entity at once; used by the filtered-MRR evaluator for
+    both tail corruption (pass heads as s_idx) and head corruption (pass
+    tails — DistMult's bilinear-diagonal form is symmetric in s/t roles).
+    """
+    del use_pallas  # the all-candidates form is a plain matmul
+
+    def score(h, rel_dec_flat, s_idx, r_idx):
+        rel = rel_dec_flat.reshape(spec.relations, spec.embed_dim)
+        q = h[s_idx] * rel[r_idx]             # [Q, d]
+        return q @ h.T                        # [Q, N]
+
+    return score
+
+
+# --------------------------------------------------------------------------
+# Reference full-model forward (oracle for python tests)
+# --------------------------------------------------------------------------
+
+def reference_loss(spec: ModelSpec, flat, node_input, src, dst, rel,
+                   edge_mask, ts, tr, tt, labels, tmask) -> jnp.ndarray:
+    """Same computation as train_step's loss with the pure-jnp kernels and
+    no dropout — the model-level oracle."""
+    params = unflatten(spec, flat)
+    h = encoder(spec, params, node_input, src, dst, rel, edge_mask,
+                dropout_key=None, use_pallas=False, fused=False)
+    logits = decoder(spec, params, h, ts, tr, tt, use_pallas=False)
+    return bce_loss_sum(logits, labels, tmask)

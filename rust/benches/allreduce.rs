@@ -1,0 +1,47 @@
+//! Bench: ring AllReduce vs parameter-server aggregation (paper §2.2's
+//! motivation for choosing AllReduce) — real in-memory reduction cost
+//! across worker counts and message sizes, plus the α-β model's predicted
+//! wire times for the paper's 40GbE cluster.
+
+use kgscale::config::ExperimentConfig;
+use kgscale::train::allreduce::{param_server_sum, ring_allreduce_sum};
+use kgscale::train::netsim::NetworkModel;
+use kgscale::util::bench::bench;
+use kgscale::util::rng::Rng;
+
+fn buffers(p: usize, n: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seeded(1);
+    (0..p).map(|_| (0..n).map(|_| rng.uniform_f32(-1.0, 1.0)).collect()).collect()
+}
+
+fn main() {
+    println!("== allreduce bench (in-memory reduction) ==");
+    for p in [2usize, 4, 8] {
+        for n in [65_536usize, 1_048_576] {
+            let base = buffers(p, n);
+            bench(&format!("ring/P={p}/{}k-f32", n / 1024), 0.4, || {
+                let mut b = base.clone();
+                ring_allreduce_sum(&mut b);
+                std::hint::black_box(b);
+            });
+            bench(&format!("param-server/P={p}/{}k-f32", n / 1024), 0.4, || {
+                let mut b = base.clone();
+                param_server_sum(&mut b);
+                std::hint::black_box(b);
+            });
+        }
+    }
+
+    println!("\n== α-β model: predicted sync time on the paper's 40GbE cluster ==");
+    let net = NetworkModel::new(&ExperimentConfig::tiny().network);
+    println!("{:<10} {:>14} {:>14}", "P", "ring", "param-server");
+    for p in [2usize, 4, 8, 16] {
+        let bytes = 4 * 1_048_576; // 1M f32 gradients = 4 MB
+        println!(
+            "{:<10} {:>12.3}ms {:>12.3}ms",
+            p,
+            net.ring_allreduce_secs(bytes, p) * 1e3,
+            net.param_server_secs(bytes, p) * 1e3
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! Bench: compute-graph extraction — the paper's `getComputeGraph`, its
+//! dominant per-batch component (Figure 6b) — across batch sizes, hop
+//! counts (Figure 2 shape), and partition counts. Reports edge-visit
+//! throughput, the §Perf L3 target metric.
+
+use kgscale::config::{ExperimentConfig, PartitionConfig, PartitionStrategy};
+use kgscale::graph::generator;
+use kgscale::partition;
+use kgscale::sampler::compute_graph::{avg_closure_size, ComputeGraphBuilder};
+use kgscale::sampler::{PartContext, TrainTriple};
+use kgscale::util::bench::bench;
+
+fn main() {
+    let cfg = ExperimentConfig::from_file("configs/citemini.toml")
+        .unwrap_or_else(|_| ExperimentConfig::tiny());
+    let g = generator::generate(&cfg.dataset);
+    let mk_ctx = |p: usize| -> PartContext {
+        let pcfg = PartitionConfig {
+            strategy: PartitionStrategy::Hdrf,
+            num_partitions: p,
+            hops: 2,
+            hdrf_lambda: 1.0,
+        };
+        let parts = partition::partition_graph(&g, &pcfg, 42);
+        PartContext::new(&parts[0])
+    };
+
+    println!("== compute-graph bench: {} entities, {} edges ==", g.num_entities, g.train.len());
+    for p in [1usize, 4, 8] {
+        let ctx = mk_ctx(p);
+        let mut builder = ComputeGraphBuilder::new(&ctx);
+        for batch_pos in [256usize, 1024] {
+            let take = batch_pos.min(ctx.core_edges.len());
+            let batch: Vec<TrainTriple> = ctx.core_edges[..take]
+                .iter()
+                .map(|e| TrainTriple { s: e.s, r: e.r, t: e.t, label: 1.0 })
+                .collect();
+            let cg = builder.build(&ctx, &batch, 2, g.num_relations);
+            let edges = cg.num_edges();
+            let r = bench(
+                &format!("getComputeGraph/P={p}/batch={take}/2-hop"),
+                0.5,
+                || {
+                    std::hint::black_box(builder.build(&ctx, &batch, 2, g.num_relations));
+                },
+            );
+            println!(
+                "    -> cg: {} nodes, {} msg edges; {:.1} M edge-visits/s",
+                cg.num_nodes(),
+                edges,
+                edges as f64 / r.mean_secs / 1e6
+            );
+        }
+    }
+
+    println!("\n== Figure 2 shape: avg closure size vs hops (full graph) ==");
+    let ctx = mk_ctx(1);
+    for hops in 1..=3 {
+        let avg = avg_closure_size(&ctx, hops, 100, 7);
+        println!("hops={hops}: avg {avg:.1} vertices per embedding");
+    }
+}

@@ -1,0 +1,59 @@
+//! Bench: end-to-end epoch time vs trainer count (Table 3/4's timing
+//! columns, Figure 6a) on the tiny tier — small enough for `make bench`
+//! to finish quickly; the -mini tier numbers live in EXPERIMENTS.md via
+//! the examples. Requires `make artifacts`.
+
+use kgscale::config::ExperimentConfig;
+use kgscale::graph::generator;
+use kgscale::model::Manifest;
+use kgscale::runtime::Runtime;
+use kgscale::train::Trainer;
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP end_to_end bench: run `make artifacts` first");
+        return;
+    }
+    let cfg = ExperimentConfig::tiny();
+    let g = generator::generate(&cfg.dataset);
+    let manifest = Manifest::load(dir).unwrap();
+    let runtime = Runtime::new(dir).unwrap();
+
+    println!("== end-to-end epoch bench (tiny, full batch) ==");
+    println!(
+        "{:<10} {:>16} {:>16} {:>10} {:>12}",
+        "trainers", "virt epoch", "wall epoch", "speedup", "loss@3ep"
+    );
+    let mut base = 0.0;
+    for p in [1usize, 2, 4, 8] {
+        let mut c = cfg.clone();
+        c.train.num_trainers = p;
+        let mut t = Trainer::new(c, &g, &runtime, manifest.clone()).unwrap();
+        // Warm epoch (not timed), then 3 measured epochs.
+        t.train_epoch().unwrap();
+        let mut virt = 0.0;
+        let mut wall = 0.0;
+        let mut loss = 0.0;
+        for _ in 0..3 {
+            let r = t.train_epoch().unwrap();
+            virt += r.virtual_secs;
+            wall += r.wall_secs;
+            loss = r.mean_loss;
+        }
+        virt /= 3.0;
+        wall /= 3.0;
+        if p == 1 {
+            base = virt;
+        }
+        println!(
+            "{:<10} {:>14.4}s {:>14.4}s {:>9.2}x {:>12.4}",
+            p,
+            virt,
+            wall,
+            base / virt,
+            loss
+        );
+    }
+}

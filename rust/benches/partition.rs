@@ -1,0 +1,64 @@
+//! Bench: partitioning strategies (Table 2 / Table 5 substrate).
+//! Measures HDRF / DBH / Greedy-VP / Random assignment and 2-hop
+//! neighborhood expansion on the fbmini-scale graph, and prints the
+//! partition-quality stats the paper's tables report.
+
+use kgscale::config::{ExperimentConfig, PartitionConfig, PartitionStrategy};
+use kgscale::graph::generator;
+use kgscale::partition::{self, stats as pstats};
+use kgscale::util::bench::bench;
+
+fn main() {
+    let cfg = ExperimentConfig::from_file("configs/fbmini.toml")
+        .unwrap_or_else(|_| ExperimentConfig::tiny());
+    let g = generator::generate(&cfg.dataset);
+    println!(
+        "== partition bench: {} entities, {} train edges ==",
+        g.num_entities,
+        g.train.len()
+    );
+
+    for strategy in [
+        PartitionStrategy::Hdrf,
+        PartitionStrategy::Dbh,
+        PartitionStrategy::MetisLike,
+        PartitionStrategy::Random,
+    ] {
+        let pcfg =
+            PartitionConfig { strategy, num_partitions: 4, hops: 2, hdrf_lambda: 1.0 };
+        bench(&format!("assign/{}/P=4", strategy.name()), 0.6, || {
+            std::hint::black_box(partition::assign_edges(&g, &pcfg, 42));
+        });
+        let assignment = partition::assign_edges(&g, &pcfg, 42);
+        bench(&format!("expand-2hop/{}/P=4", strategy.name()), 0.6, || {
+            std::hint::black_box(partition::expansion::expand(&g, &assignment, 2));
+        });
+        let parts = partition::expansion::expand(&g, &assignment, 2);
+        let s = pstats::compute(&parts, g.num_entities);
+        println!(
+            "    -> core {} | total {} | RF {:.2} | balance {:.2}",
+            s.core_cell(),
+            s.total_cell(),
+            s.replication_factor,
+            s.balance_ratio
+        );
+    }
+
+    // Table 2 shape: RF vs P for HDRF.
+    for p in [2usize, 4, 8] {
+        let pcfg = PartitionConfig {
+            strategy: PartitionStrategy::Hdrf,
+            num_partitions: p,
+            hops: 2,
+            hdrf_lambda: 1.0,
+        };
+        let parts = partition::partition_graph(&g, &pcfg, 42);
+        let s = pstats::compute(&parts, g.num_entities);
+        println!(
+            "table2: P={p} core {} total {} RF {:.2}",
+            s.core_cell(),
+            s.total_cell(),
+            s.replication_factor
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! Bench: negative sampling throughput — local constraint-based (paper)
+//! vs partition-wide vs global scope (§3.3.1), plus epoch batching.
+
+use kgscale::config::{ExperimentConfig, PartitionConfig, PartitionStrategy};
+use kgscale::graph::generator;
+use kgscale::partition;
+use kgscale::sampler::batch::EpochBatches;
+use kgscale::sampler::negative::{NegativeSampler, Scope};
+use kgscale::sampler::PartContext;
+use kgscale::util::bench::bench;
+use kgscale::util::rng::Rng;
+
+fn main() {
+    let cfg = ExperimentConfig::from_file("configs/fbmini.toml")
+        .unwrap_or_else(|_| ExperimentConfig::tiny());
+    let g = generator::generate(&cfg.dataset);
+    let pcfg = PartitionConfig {
+        strategy: PartitionStrategy::Hdrf,
+        num_partitions: 4,
+        hops: 2,
+        hdrf_lambda: 1.0,
+    };
+    let parts = partition::partition_graph(&g, &pcfg, 42);
+    let ctx = PartContext::new(&parts[0]);
+    println!(
+        "== sampler bench: partition 0 has {} core edges, {} core vertices ==",
+        ctx.core_edges.len(),
+        ctx.core_vertices.len()
+    );
+
+    for (label, scope) in [
+        ("local-core (paper)", Scope::LocalCore),
+        ("partition-wide", Scope::PartitionWide),
+        ("global (ablation)", Scope::Global),
+    ] {
+        let sampler = NegativeSampler::new(&ctx, scope, g.num_entities);
+        let r = bench(&format!("negatives/{label}/1-per-pos"), 0.5, || {
+            let mut rng = Rng::seeded(7);
+            std::hint::black_box(sampler.sample_epoch(&ctx, 1, &mut rng));
+        });
+        let per_sample = r.mean_secs / ctx.core_edges.len() as f64;
+        println!("    -> {:.1} ns/negative", per_sample * 1e9);
+    }
+
+    let sampler = NegativeSampler::new(&ctx, Scope::LocalCore, g.num_entities);
+    let mut rng = Rng::seeded(7);
+    let (negs, _) = sampler.sample_epoch(&ctx, 1, &mut rng);
+    bench("epoch-batching/full-batch", 0.5, || {
+        let mut rng = Rng::seeded(9);
+        std::hint::black_box(EpochBatches::build(&ctx, negs.clone(), 0, &mut rng));
+    });
+    bench("epoch-batching/minibatch-1024", 0.5, || {
+        let mut rng = Rng::seeded(9);
+        std::hint::black_box(EpochBatches::build(&ctx, negs.clone(), 1024, &mut rng));
+    });
+}

@@ -1,0 +1,158 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline build).
+//!
+//! Grammar: `kgscale <command> [--key value]... [--flag]...`
+//! Unknown keys are an error (catching typos beats silently ignoring).
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            args.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // flag if next is absent or another option
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        if args.options.insert(key.to_string(), v.clone()).is_some() {
+                            bail!("duplicate option --{key}");
+                        }
+                    }
+                    _ => args.flags.push(key.to_string()),
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} wants an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{key}: bad integer {p:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error on any option/flag never consumed by the command.
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.options.keys() {
+            if !consumed.contains(k) {
+                bail!("unknown option --{k} for command {:?}", self.command);
+            }
+        }
+        for f in &self.flags {
+            if !consumed.contains(f) {
+                bail!("unknown flag --{f} for command {:?}", self.command);
+            }
+        }
+        Ok(())
+    }
+}
+
+pub const USAGE: &str = "\
+kgscale — distributed GNN knowledge-graph embedding training
+          (reproduction of Sheikh et al., 'Scaling Knowledge Graph
+           Embedding Models', 2022)
+
+USAGE: kgscale <command> [options]
+
+COMMANDS
+  info                         platform + artifact inventory
+  generate  --config C [--out DIR]
+                               generate the synthetic dataset
+  plan      --config C [--trainers 1,2,4,8] [--out plan.json]
+                               measure AOT bucket sizes for aot.py
+  partition --config C [--partitions 4] [--strategy hdrf|dbh|metis_like|random]
+                               partition + expand, print Table-2 stats
+  train     --config C [--trainers P] [--epochs N] [--eval-every K]
+                               train and report loss/MRR
+  experiment <table1|table2|table3|table4|table5|fig2|fig6|fig7|all>
+            --config C [--trainers 1,2,4,8] [--epochs N] ...
+                               regenerate a paper table/figure
+  help                         this text
+
+Options shared by training commands:
+  --config <path.toml>   experiment config (defaults to built-in tiny tier)
+  --artifacts <dir>      artifact root (default: from config)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = Args::parse(&argv("experiment table3 --trainers 1,2,4 --force --epochs 5")).unwrap();
+        assert_eq!(a.command, "experiment");
+        assert_eq!(a.positional, vec!["table3"]);
+        assert_eq!(a.get("trainers"), Some("1,2,4"));
+        assert_eq!(a.get_usize("epochs", 0).unwrap(), 5);
+        assert!(a.flag("force"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_option_rejected_on_finish() {
+        let a = Args::parse(&argv("train --bogus 3")).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn usize_list_parsing() {
+        let a = Args::parse(&argv("x --trainers 1,2,8")).unwrap();
+        assert_eq!(a.get_usize_list("trainers", &[]).unwrap(), vec![1, 2, 8]);
+        let b = Args::parse(&argv("x")).unwrap();
+        assert_eq!(b.get_usize_list("trainers", &[1, 4]).unwrap(), vec![1, 4]);
+        let c = Args::parse(&argv("x --trainers 1,zz")).unwrap();
+        assert!(c.get_usize_list("trainers", &[]).is_err());
+    }
+
+    #[test]
+    fn duplicate_option_rejected() {
+        assert!(Args::parse(&argv("x --a 1 --a 2")).is_err());
+    }
+}

@@ -1,0 +1,452 @@
+//! Experiment configuration: a TOML-subset file (`configs/*.toml`) parsed
+//! into typed structs with validated defaults. Every run of the system —
+//! CLI, examples, benches, tests — goes through [`ExperimentConfig`], so
+//! a config file fully determines a reproducible experiment.
+
+pub mod toml;
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// What kind of synthetic graph to generate (see `graph::generator`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// Multi-relational KG with Zipf-skewed entity popularity
+    /// (FB15k-237 stand-in).
+    ZipfKg,
+    /// Single-relation citation-style graph grown by preferential
+    /// attachment, with dense input features (ogbl-citation2 stand-in).
+    Citation,
+}
+
+impl DatasetKind {
+    pub fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "zipf_kg" => Ok(DatasetKind::ZipfKg),
+            "citation" => Ok(DatasetKind::Citation),
+            other => bail!("unknown dataset kind {other:?} (want zipf_kg|citation)"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetConfig {
+    pub name: String,
+    pub kind: DatasetKind,
+    pub entities: usize,
+    pub relations: usize,
+    pub train_edges: usize,
+    pub valid_edges: usize,
+    pub test_edges: usize,
+    /// 0 ⇒ featureless (trainable embedding table); >0 ⇒ provided features.
+    pub feature_dim: usize,
+    /// Skew of entity popularity for ZipfKg / attachment bias strength.
+    pub zipf_exponent: f64,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    /// Hidden & output embedding dimension d.
+    pub embed_dim: usize,
+    /// Number of basis matrices B in the basis decomposition (Eq. 2).
+    pub num_bases: usize,
+    /// Number of RGCN layers = message-passing hops n.
+    pub num_layers: usize,
+    pub dropout: f64,
+    /// Add inverse relations (r+R) so messages flow both directions —
+    /// standard RGCN link-prediction setup.
+    pub inverse_relations: bool,
+    pub self_loop: bool,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GradSync {
+    /// Ring AllReduce (the paper's choice, §2.2/§3.1).
+    Ring,
+    /// Parameter-server baseline (§2.2 comparison).
+    ParamServer,
+    /// No sync — each worker drifts; used only in ablations/tests.
+    None,
+}
+
+impl GradSync {
+    pub fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "ring" => Ok(GradSync::Ring),
+            "param_server" => Ok(GradSync::ParamServer),
+            "none" => Ok(GradSync::None),
+            other => bail!("unknown grad_sync {other:?} (want ring|param_server|none)"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub lr: f64,
+    pub adam_beta1: f64,
+    pub adam_beta2: f64,
+    pub adam_eps: f64,
+    pub epochs: usize,
+    /// Positive edges per mini-batch; 0 ⇒ full-batch (all core edges).
+    pub batch_edges: usize,
+    /// s in the paper: negatives sampled per positive.
+    pub negatives_per_positive: usize,
+    pub num_trainers: usize,
+    pub grad_sync: GradSync,
+    /// Negative sampling scope: true = constraint-based/local (paper),
+    /// false = global baseline (ablation; models cross-partition fetches).
+    pub local_negatives: bool,
+    pub seed: u64,
+    /// Evaluate on validation every k epochs (0 = only at end).
+    pub eval_every: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// High-Degree Replicated First streaming vertex-cut (KaHIP-substitute).
+    Hdrf,
+    /// Degree-Based Hashing vertex-cut (cheap baseline).
+    Dbh,
+    /// Greedy vertex partitioning + 1-hop core edges (METIS-substitute).
+    MetisLike,
+    /// Uniform random edge assignment (paper's Random baseline).
+    Random,
+}
+
+impl PartitionStrategy {
+    pub fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "hdrf" => Ok(PartitionStrategy::Hdrf),
+            "dbh" => Ok(PartitionStrategy::Dbh),
+            "metis_like" => Ok(PartitionStrategy::MetisLike),
+            "random" => Ok(PartitionStrategy::Random),
+            other => bail!("unknown partition strategy {other:?}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::Hdrf => "hdrf",
+            PartitionStrategy::Dbh => "dbh",
+            PartitionStrategy::MetisLike => "metis_like",
+            PartitionStrategy::Random => "random",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PartitionConfig {
+    pub strategy: PartitionStrategy,
+    pub num_partitions: usize,
+    /// Neighborhood-expansion hops; must equal `model.num_layers` for
+    /// self-sufficiency (validated below).
+    pub hops: usize,
+    /// HDRF balance/replication trade-off parameter λ.
+    pub hdrf_lambda: f64,
+}
+
+/// α-β interconnect model for the simulated cluster: transferring M bytes
+/// costs `latency_us * 1e-6 + M / (bandwidth_gbps * 1e9 / 8)` seconds per
+/// hop. Defaults model the paper's 40 Gb Ethernet.
+#[derive(Clone, Debug)]
+pub struct NetworkConfig {
+    pub latency_us: f64,
+    pub bandwidth_gbps: f64,
+    /// Trainers per machine (paper: 2 per node, 2 GPUs each). Trainers on
+    /// the same machine communicate at `local_bandwidth_gbps`.
+    pub trainers_per_node: usize,
+    pub local_bandwidth_gbps: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RuntimeConfig {
+    pub artifacts_dir: String,
+    /// Artifact family to load, e.g. "fbmini" -> artifacts/fbmini/.
+    pub model_key: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub dataset: DatasetConfig,
+    pub model: ModelConfig,
+    pub train: TrainConfig,
+    pub partition: PartitionConfig,
+    pub network: NetworkConfig,
+    pub runtime: RuntimeConfig,
+}
+
+impl ExperimentConfig {
+    /// Built-in defaults: the `tiny` tier (fast enough for unit tests).
+    pub fn tiny() -> Self {
+        ExperimentConfig {
+            name: "tiny".into(),
+            dataset: DatasetConfig {
+                name: "tiny".into(),
+                kind: DatasetKind::ZipfKg,
+                entities: 300,
+                relations: 8,
+                train_edges: 2000,
+                valid_edges: 150,
+                test_edges: 150,
+                feature_dim: 0,
+                zipf_exponent: 1.1,
+                seed: 1234,
+            },
+            model: ModelConfig {
+                embed_dim: 16,
+                num_bases: 2,
+                num_layers: 2,
+                dropout: 0.0,
+                inverse_relations: true,
+                self_loop: true,
+            },
+            train: TrainConfig {
+                lr: 0.01,
+                adam_beta1: 0.9,
+                adam_beta2: 0.999,
+                adam_eps: 1e-8,
+                epochs: 10,
+                batch_edges: 0,
+                negatives_per_positive: 1,
+                num_trainers: 1,
+                grad_sync: GradSync::Ring,
+                local_negatives: true,
+                seed: 7,
+                eval_every: 0,
+            },
+            partition: PartitionConfig {
+                strategy: PartitionStrategy::Hdrf,
+                num_partitions: 1,
+                hops: 2,
+                hdrf_lambda: 1.0,
+            },
+            network: NetworkConfig {
+                latency_us: 30.0,
+                bandwidth_gbps: 40.0,
+                trainers_per_node: 2,
+                local_bandwidth_gbps: 160.0,
+            },
+            runtime: RuntimeConfig { artifacts_dir: "artifacts".into(), model_key: "tiny".into() },
+        }
+    }
+
+    /// Load from a TOML file; missing keys keep the `tiny()` defaults.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config file {path}"))?;
+        Self::from_toml_str(&text).with_context(|| format!("parsing config file {path}"))
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = toml::parse(text)?;
+        let mut cfg = Self::tiny();
+        if let Some(v) = doc.get_str("name") {
+            cfg.name = v.to_string();
+            cfg.dataset.name = v.to_string();
+            cfg.runtime.model_key = v.to_string();
+        }
+        // dataset
+        if let Some(v) = doc.get_str("dataset.kind") {
+            cfg.dataset.kind = DatasetKind::from_str(v)?;
+        }
+        set_usize(&doc, "dataset.entities", &mut cfg.dataset.entities);
+        set_usize(&doc, "dataset.relations", &mut cfg.dataset.relations);
+        set_usize(&doc, "dataset.train_edges", &mut cfg.dataset.train_edges);
+        set_usize(&doc, "dataset.valid_edges", &mut cfg.dataset.valid_edges);
+        set_usize(&doc, "dataset.test_edges", &mut cfg.dataset.test_edges);
+        set_usize(&doc, "dataset.feature_dim", &mut cfg.dataset.feature_dim);
+        set_f64(&doc, "dataset.zipf_exponent", &mut cfg.dataset.zipf_exponent);
+        set_u64(&doc, "dataset.seed", &mut cfg.dataset.seed);
+        // model
+        set_usize(&doc, "model.embed_dim", &mut cfg.model.embed_dim);
+        set_usize(&doc, "model.num_bases", &mut cfg.model.num_bases);
+        set_usize(&doc, "model.num_layers", &mut cfg.model.num_layers);
+        set_f64(&doc, "model.dropout", &mut cfg.model.dropout);
+        set_bool(&doc, "model.inverse_relations", &mut cfg.model.inverse_relations);
+        set_bool(&doc, "model.self_loop", &mut cfg.model.self_loop);
+        // train
+        set_f64(&doc, "train.lr", &mut cfg.train.lr);
+        set_usize(&doc, "train.epochs", &mut cfg.train.epochs);
+        set_usize(&doc, "train.batch_edges", &mut cfg.train.batch_edges);
+        set_usize(&doc, "train.negatives_per_positive", &mut cfg.train.negatives_per_positive);
+        set_usize(&doc, "train.num_trainers", &mut cfg.train.num_trainers);
+        set_bool(&doc, "train.local_negatives", &mut cfg.train.local_negatives);
+        set_u64(&doc, "train.seed", &mut cfg.train.seed);
+        set_usize(&doc, "train.eval_every", &mut cfg.train.eval_every);
+        if let Some(v) = doc.get_str("train.grad_sync") {
+            cfg.train.grad_sync = GradSync::from_str(v)?;
+        }
+        // partition
+        if let Some(v) = doc.get_str("partition.strategy") {
+            cfg.partition.strategy = PartitionStrategy::from_str(v)?;
+        }
+        set_usize(&doc, "partition.num_partitions", &mut cfg.partition.num_partitions);
+        set_usize(&doc, "partition.hops", &mut cfg.partition.hops);
+        set_f64(&doc, "partition.hdrf_lambda", &mut cfg.partition.hdrf_lambda);
+        // network
+        set_f64(&doc, "network.latency_us", &mut cfg.network.latency_us);
+        set_f64(&doc, "network.bandwidth_gbps", &mut cfg.network.bandwidth_gbps);
+        set_usize(&doc, "network.trainers_per_node", &mut cfg.network.trainers_per_node);
+        set_f64(&doc, "network.local_bandwidth_gbps", &mut cfg.network.local_bandwidth_gbps);
+        // runtime
+        if let Some(v) = doc.get_str("runtime.artifacts_dir") {
+            cfg.runtime.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = doc.get_str("runtime.model_key") {
+            cfg.runtime.model_key = v.to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.dataset.entities == 0 || self.dataset.relations == 0 {
+            bail!("dataset must have entities > 0 and relations > 0");
+        }
+        if self.model.num_bases == 0 || self.model.embed_dim == 0 {
+            bail!("model.embed_dim and model.num_bases must be > 0");
+        }
+        if self.model.num_layers == 0 {
+            bail!("model.num_layers must be >= 1");
+        }
+        if self.partition.hops != self.model.num_layers {
+            bail!(
+                "partition.hops ({}) must equal model.num_layers ({}) for \
+                 self-sufficient partitions (paper §3.2.2)",
+                self.partition.hops,
+                self.model.num_layers
+            );
+        }
+        if self.train.num_trainers == 0 {
+            bail!("train.num_trainers must be >= 1");
+        }
+        if !(0.0..1.0).contains(&self.model.dropout) {
+            bail!("model.dropout must be in [0, 1)");
+        }
+        if self.train.negatives_per_positive == 0 {
+            bail!("train.negatives_per_positive must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Compact JSON summary — embedded in experiment result files so each
+    /// result records the exact configuration that produced it.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            (
+                "dataset",
+                Json::obj(vec![
+                    ("entities", Json::Num(self.dataset.entities as f64)),
+                    ("relations", Json::Num(self.dataset.relations as f64)),
+                    ("train_edges", Json::Num(self.dataset.train_edges as f64)),
+                    ("feature_dim", Json::Num(self.dataset.feature_dim as f64)),
+                    ("seed", Json::Num(self.dataset.seed as f64)),
+                ]),
+            ),
+            (
+                "model",
+                Json::obj(vec![
+                    ("embed_dim", Json::Num(self.model.embed_dim as f64)),
+                    ("num_bases", Json::Num(self.model.num_bases as f64)),
+                    ("num_layers", Json::Num(self.model.num_layers as f64)),
+                ]),
+            ),
+            (
+                "train",
+                Json::obj(vec![
+                    ("lr", Json::Num(self.train.lr)),
+                    ("epochs", Json::Num(self.train.epochs as f64)),
+                    ("batch_edges", Json::Num(self.train.batch_edges as f64)),
+                    ("num_trainers", Json::Num(self.train.num_trainers as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+fn set_usize(doc: &toml::TomlDoc, key: &str, slot: &mut usize) {
+    if let Some(v) = doc.get_usize(key) {
+        *slot = v;
+    }
+}
+
+fn set_u64(doc: &toml::TomlDoc, key: &str, slot: &mut u64) {
+    if let Some(v) = doc.get(key).and_then(|v| v.as_i64()) {
+        *slot = v as u64;
+    }
+}
+
+fn set_f64(doc: &toml::TomlDoc, key: &str, slot: &mut f64) {
+    if let Some(v) = doc.get_f64(key) {
+        *slot = v;
+    }
+}
+
+fn set_bool(doc: &toml::TomlDoc, key: &str, slot: &mut bool) {
+    if let Some(v) = doc.get_bool(key) {
+        *slot = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_defaults_validate() {
+        ExperimentConfig::tiny().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+name = "custom"
+[dataset]
+entities = 5000
+relations = 12
+[model]
+embed_dim = 32
+[train]
+num_trainers = 4
+grad_sync = "param_server"
+[partition]
+strategy = "dbh"
+num_partitions = 4
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "custom");
+        assert_eq!(cfg.dataset.entities, 5000);
+        assert_eq!(cfg.model.embed_dim, 32);
+        assert_eq!(cfg.train.grad_sync, GradSync::ParamServer);
+        assert_eq!(cfg.partition.strategy, PartitionStrategy::Dbh);
+        assert_eq!(cfg.partition.num_partitions, 4);
+    }
+
+    #[test]
+    fn hops_layers_mismatch_rejected() {
+        let err = ExperimentConfig::from_toml_str(
+            "[partition]\nhops = 3\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("self-sufficient"), "got: {err}");
+    }
+
+    #[test]
+    fn bad_enum_value_rejected() {
+        assert!(ExperimentConfig::from_toml_str("[partition]\nstrategy = \"kahip\"\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[dataset]\nkind = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn config_json_summary_contains_key_fields() {
+        let j = ExperimentConfig::tiny().to_json().to_string();
+        assert!(j.contains("\"entities\""));
+        assert!(j.contains("\"embed_dim\""));
+    }
+}

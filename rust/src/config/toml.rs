@@ -1,0 +1,264 @@
+//! TOML-subset parser for experiment configuration files.
+//!
+//! Supports the subset actually used by `configs/*.toml`:
+//! `[section]` and `[section.sub]` headers, `key = value` with string,
+//! integer, float, boolean, and homogeneous-array values, `#` comments.
+//! No multi-line strings, no dates, no array-of-tables — config files in
+//! this repo do not need them, and failing loudly on unsupported syntax
+//! is safer than a partial parse.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|x| usize::try_from(x).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat document: dotted section path + key -> value
+/// (`[train]` + `lr = 0.01` becomes `"train.lr"`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, dotted: &str) -> Option<&TomlValue> {
+        self.entries.get(dotted)
+    }
+
+    pub fn get_str(&self, dotted: &str) -> Option<&str> {
+        self.get(dotted).and_then(|v| v.as_str())
+    }
+
+    pub fn get_usize(&self, dotted: &str) -> Option<usize> {
+        self.get(dotted).and_then(|v| v.as_usize())
+    }
+
+    pub fn get_f64(&self, dotted: &str) -> Option<f64> {
+        self.get(dotted).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_bool(&self, dotted: &str) -> Option<bool> {
+        self.get(dotted).and_then(|v| v.as_bool())
+    }
+
+    /// Keys under a section prefix, e.g. `section_keys("train")`.
+    pub fn section_keys(&self, prefix: &str) -> Vec<&str> {
+        let want = format!("{prefix}.");
+        self.entries.keys().filter(|k| k.starts_with(&want)).map(|k| k.as_str()).collect()
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(input: &str) -> anyhow::Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                anyhow::bail!("line {}: empty section name", lineno + 1);
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected `key = value`", lineno + 1))?;
+        let key = line[..eq].trim();
+        let val_src = line[eq + 1..].trim();
+        if key.is_empty() || val_src.is_empty() {
+            anyhow::bail!("line {}: empty key or value", lineno + 1);
+        }
+        let value = parse_value(val_src)
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let full_key =
+            if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        if doc.entries.insert(full_key.clone(), value).is_some() {
+            anyhow::bail!("line {}: duplicate key {full_key:?}", lineno + 1);
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(src: &str) -> anyhow::Result<TomlValue> {
+    if let Some(rest) = src.strip_prefix('"') {
+        let end = rest
+            .find('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        if !rest[end + 1..].trim().is_empty() {
+            anyhow::bail!("trailing characters after string");
+        }
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if src == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if src == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = src.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    // Numbers: underscores allowed as separators, like real TOML.
+    let cleaned: String = src.chars().filter(|&c| c != '_').collect();
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        if let Ok(x) = cleaned.parse::<f64>() {
+            return Ok(TomlValue::Float(x));
+        }
+    }
+    if let Ok(x) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(x));
+    }
+    anyhow::bail!("cannot parse value {src:?}")
+}
+
+/// Split an array body on commas, respecting quoted strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = parse(
+            r#"
+# experiment config
+name = "fb-mini"           # inline comment
+[dataset]
+entities = 2_500
+relations = 40
+zipf = 1.15
+[train]
+lr = 0.01
+full_batch = true
+trainers = [1, 2, 4, 8]
+labels = ["a", "b"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("fb-mini"));
+        assert_eq!(doc.get_usize("dataset.entities"), Some(2500));
+        assert_eq!(doc.get_f64("dataset.zipf"), Some(1.15));
+        assert_eq!(doc.get_f64("train.lr"), Some(0.01));
+        assert_eq!(doc.get_bool("train.full_batch"), Some(true));
+        let arr = doc.get("train.trainers").unwrap();
+        assert_eq!(
+            arr,
+            &TomlValue::Arr(vec![TomlValue::Int(1), TomlValue::Int(2), TomlValue::Int(4), TomlValue::Int(8)])
+        );
+        assert_eq!(doc.section_keys("train").len(), 4);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse("key = \"a#b\"").unwrap();
+        assert_eq!(doc.get_str("key"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_precise() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("x = @@").is_err());
+        let err = parse("a = 1\na = 2").unwrap_err().to_string();
+        assert!(err.contains("duplicate"));
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let doc = parse("a = 3\nb = 3.0\nc = 1e-3").unwrap();
+        assert_eq!(doc.get("a"), Some(&TomlValue::Int(3)));
+        assert_eq!(doc.get("b"), Some(&TomlValue::Float(3.0)));
+        assert_eq!(doc.get_f64("c"), Some(1e-3));
+        // ints coerce to f64 on demand
+        assert_eq!(doc.get_f64("a"), Some(3.0));
+    }
+}

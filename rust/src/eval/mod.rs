@@ -1,0 +1,255 @@
+//! Link-prediction evaluation (paper §4.2): filtered MRR and Hits@k.
+//!
+//! Protocol: encode the *full* train graph once (evaluation is a
+//! single-node operation in the paper too — partitioning only affects
+//! training), then for every test triple rank the true tail against all
+//! entities under tail corruption and the true head under head
+//! corruption, in the **filtered setting**: candidates that form a known
+//! triple (train ∪ valid ∪ test) other than the probe itself are removed
+//! from the ranking.
+//!
+//! The all-candidates scores come from the AOT `score` artifact
+//! (`[Q, N] = (h[s] ∘ w[r]) · hᵀ`); DistMult's diagonal form makes head
+//! corruption the same computation with the roles swapped.
+
+use crate::graph::{KnowledgeGraph, Triple};
+use crate::model::Manifest;
+use crate::runtime::{literal_to_f32, HostTensor, Runtime};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// MRR / Hits@k results (both-direction average, the standard protocol).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RankMetrics {
+    pub mrr: f64,
+    pub hits1: f64,
+    pub hits3: f64,
+    pub hits10: f64,
+    pub num_queries: usize,
+}
+
+/// Filtered-setting index: (entity, relation) -> candidate entities that
+/// form known triples. Built once per dataset; `tail[(s,r)]` lists t's,
+/// `head[(t,r)]` lists s's.
+pub struct FilterIndex {
+    tail: HashMap<u64, Vec<u32>>,
+    head: HashMap<u64, Vec<u32>>,
+}
+
+#[inline]
+fn pack(a: u32, r: u32) -> u64 {
+    ((a as u64) << 24) | r as u64
+}
+
+impl FilterIndex {
+    pub fn build(g: &KnowledgeGraph) -> FilterIndex {
+        let mut tail: HashMap<u64, Vec<u32>> = HashMap::new();
+        let mut head: HashMap<u64, Vec<u32>> = HashMap::new();
+        for e in g.train.iter().chain(&g.valid).chain(&g.test) {
+            tail.entry(pack(e.s, e.r)).or_default().push(e.t);
+            head.entry(pack(e.t, e.r)).or_default().push(e.s);
+        }
+        FilterIndex { tail, head }
+    }
+
+    fn known_tails(&self, s: u32, r: u32) -> &[u32] {
+        self.tail.get(&pack(s, r)).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    fn known_heads(&self, t: u32, r: u32) -> &[u32] {
+        self.head.get(&pack(t, r)).map(Vec::as_slice).unwrap_or(&[])
+    }
+}
+
+/// Encode the full train graph with the `encode` artifact.
+/// Returns h as a flat [N_pad * d] vector (N_pad from the manifest).
+pub fn encode_full_graph(
+    runtime: &Runtime,
+    manifest: &Manifest,
+    params: &[f32],
+    graph: &KnowledgeGraph,
+) -> Result<Vec<f32>> {
+    let (file, n_pad, e_pad) = manifest.encode_entry()?;
+    anyhow::ensure!(n_pad >= graph.num_entities, "encode bucket too small");
+    let msgs = 2 * graph.train.len();
+    anyhow::ensure!(e_pad >= msgs, "encode edge bucket too small ({e_pad} < {msgs})");
+    let r = graph.num_relations as i32;
+
+    // Identity node layout: cg-local id == global entity id.
+    let mut src = Vec::with_capacity(e_pad);
+    let mut dst = Vec::with_capacity(e_pad);
+    let mut rel = Vec::with_capacity(e_pad);
+    for e in &graph.train {
+        src.push(e.s as i32);
+        dst.push(e.t as i32);
+        rel.push(e.r as i32);
+        // inverse message
+        src.push(e.t as i32);
+        dst.push(e.s as i32);
+        rel.push(e.r as i32 + r);
+    }
+    let mut emask = vec![1.0f32; msgs];
+    src.resize(e_pad, 0);
+    dst.resize(e_pad, 0);
+    rel.resize(e_pad, 0);
+    emask.resize(e_pad, 0.0);
+
+    let exe = runtime.load(file)?;
+    let node_input_feat;
+    let node_input_ids;
+    let node_input = if manifest.mode == "provided" {
+        let f = manifest.feature_dim;
+        let mut feats = vec![0f32; n_pad * f];
+        feats[..graph.num_entities * f].copy_from_slice(&graph.features);
+        node_input_feat = feats;
+        HostTensor::F32(&node_input_feat, &[n_pad as i64, f as i64])
+    } else {
+        let mut ids: Vec<i32> = (0..graph.num_entities as i32).collect();
+        ids.resize(n_pad, 0);
+        node_input_ids = ids;
+        HostTensor::I32(&node_input_ids, &[n_pad as i64])
+    };
+    let outputs = exe
+        .run(&[
+            HostTensor::F32(params, &[params.len() as i64]),
+            node_input,
+            HostTensor::I32(&src, &[e_pad as i64]),
+            HostTensor::I32(&dst, &[e_pad as i64]),
+            HostTensor::I32(&rel, &[e_pad as i64]),
+            HostTensor::F32(&emask, &[e_pad as i64]),
+        ])
+        .context("running encode artifact")?;
+    anyhow::ensure!(outputs.len() == 1, "encode returned {} outputs", outputs.len());
+    literal_to_f32(&outputs[0])
+}
+
+/// Evaluate filtered MRR/Hits@k of `triples` given full-graph embeddings.
+pub fn rank_triples(
+    runtime: &Runtime,
+    manifest: &Manifest,
+    params: &[f32],
+    h: &[f32],
+    graph: &KnowledgeGraph,
+    filter: &FilterIndex,
+    triples: &[Triple],
+) -> Result<RankMetrics> {
+    let (file, q_pad, n_pad) = manifest.score_entry()?;
+    let d = manifest.embed_dim;
+    anyhow::ensure!(h.len() == n_pad * d, "embedding size mismatch");
+    let exe = runtime.load(file)?;
+    let rel_info = manifest.param("rel_dec")?;
+    let rel_flat = &params[rel_info.offset..rel_info.offset + rel_info.size];
+    let n_ent = graph.num_entities;
+
+    // Queries: tail corruption uses (s, r) probing for t; head corruption
+    // uses (t, r) probing for s (DistMult symmetry).
+    struct Query {
+        anchor: u32,
+        r: u32,
+        truth: u32,
+        tail_dir: bool,
+    }
+    let mut queries = Vec::with_capacity(triples.len() * 2);
+    for tr in triples {
+        queries.push(Query { anchor: tr.s, r: tr.r, truth: tr.t, tail_dir: true });
+        queries.push(Query { anchor: tr.t, r: tr.r, truth: tr.s, tail_dir: false });
+    }
+
+    let mut metrics = RankMetrics::default();
+    let mut s_idx = vec![0i32; q_pad];
+    let mut r_idx = vec![0i32; q_pad];
+    for chunk in queries.chunks(q_pad) {
+        for (i, q) in chunk.iter().enumerate() {
+            s_idx[i] = q.anchor as i32;
+            r_idx[i] = q.r as i32;
+        }
+        for i in chunk.len()..q_pad {
+            s_idx[i] = 0;
+            r_idx[i] = 0;
+        }
+        let outputs = exe.run(&[
+            HostTensor::F32(h, &[n_pad as i64, d as i64]),
+            HostTensor::F32(rel_flat, &[rel_flat.len() as i64]),
+            HostTensor::I32(&s_idx, &[q_pad as i64]),
+            HostTensor::I32(&r_idx, &[q_pad as i64]),
+        ])?;
+        let scores = literal_to_f32(&outputs[0])?; // [q_pad, n_pad]
+        for (i, q) in chunk.iter().enumerate() {
+            let row = &scores[i * n_pad..i * n_pad + n_ent];
+            let truth_score = row[q.truth as usize];
+            // Filtered rank: count strictly-better candidates, excluding
+            // known positives and the padding region (already excluded by
+            // slicing to n_ent).
+            let known: &[u32] = if q.tail_dir {
+                filter.known_tails(q.anchor, q.r)
+            } else {
+                filter.known_heads(q.anchor, q.r)
+            };
+            let mut better = 0usize;
+            for (c, &sc) in row.iter().enumerate() {
+                if sc > truth_score {
+                    better += 1;
+                }
+                let _ = c;
+            }
+            // Remove known positives that outscored the truth.
+            for &k in known {
+                if k != q.truth && row[k as usize] > truth_score {
+                    better -= 1;
+                }
+            }
+            let rank = better + 1;
+            metrics.mrr += 1.0 / rank as f64;
+            metrics.hits1 += (rank <= 1) as usize as f64;
+            metrics.hits3 += (rank <= 3) as usize as f64;
+            metrics.hits10 += (rank <= 10) as usize as f64;
+            metrics.num_queries += 1;
+        }
+    }
+    let n = metrics.num_queries.max(1) as f64;
+    metrics.mrr /= n;
+    metrics.hits1 /= n;
+    metrics.hits3 /= n;
+    metrics.hits10 /= n;
+    Ok(metrics)
+}
+
+/// Convenience: encode + rank in one call.
+pub fn evaluate(
+    runtime: &Runtime,
+    manifest: &Manifest,
+    params: &[f32],
+    graph: &KnowledgeGraph,
+    filter: &FilterIndex,
+    triples: &[Triple],
+) -> Result<RankMetrics> {
+    let h = encode_full_graph(runtime, manifest, params, graph)?;
+    rank_triples(runtime, manifest, params, &h, graph, filter, triples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::graph::generator;
+
+    #[test]
+    fn filter_index_lists_all_known() {
+        let g = generator::generate(&ExperimentConfig::tiny().dataset);
+        let idx = FilterIndex::build(&g);
+        for e in g.train.iter().take(50) {
+            assert!(idx.known_tails(e.s, e.r).contains(&e.t));
+            assert!(idx.known_heads(e.t, e.r).contains(&e.s));
+        }
+        // A relation id beyond the graph has no entries.
+        assert!(idx.known_tails(0, 999).is_empty());
+    }
+
+    #[test]
+    fn metrics_are_probabilities() {
+        // Pure-rust rank math smoke (runtime-dependent paths are covered
+        // by integration tests): simulate by constructing metrics inline.
+        let m = RankMetrics { mrr: 0.5, hits1: 0.3, hits3: 0.6, hits10: 0.9, num_queries: 10 };
+        assert!(m.hits1 <= m.hits3 && m.hits3 <= m.hits10);
+    }
+}

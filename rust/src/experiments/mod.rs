@@ -1,0 +1,347 @@
+//! Experiment harnesses — one function per paper table/figure (see
+//! DESIGN.md's experiment index). Each returns `report::Table`s /
+//! `report::Figure`s that the CLI and the `examples/` binaries print and
+//! archive under `results/`.
+//!
+//! The functions take the dataset + artifacts as inputs so the same
+//! harness runs at every tier (tiny for CI, the -mini tiers for the
+//! recorded EXPERIMENTS.md numbers).
+
+use crate::config::{ExperimentConfig, PartitionConfig, PartitionStrategy};
+use crate::eval::{self, FilterIndex};
+use crate::graph::{generator, KnowledgeGraph};
+use crate::metrics::RunHistory;
+use crate::model::Manifest;
+use crate::partition::{self, stats as pstats};
+use crate::report::{Figure, Table};
+use crate::runtime::Runtime;
+use crate::sampler::compute_graph::avg_closure_size;
+use crate::sampler::PartContext;
+use crate::train::Trainer;
+use crate::util::stats::humanize_secs;
+use anyhow::Result;
+
+/// Table 1: dataset statistics.
+pub fn table1(graphs: &[&KnowledgeGraph]) -> Table {
+    let mut t = Table::new(
+        "Table 1: Dataset statistics",
+        &["Dataset", "# Entities", "# Relations", "# Features", "# Train edges", "# Valid edges", "# Test edges"],
+    );
+    for g in graphs {
+        let s = g.stats();
+        t.row(vec![
+            s.name,
+            s.entities.to_string(),
+            s.relations.to_string(),
+            if s.features == 0 { "-".into() } else { s.features.to_string() },
+            s.train_edges.to_string(),
+            s.valid_edges.to_string(),
+            s.test_edges.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Table 2: partition statistics (core/total edges, RF) for a sweep of
+/// partition counts under the configured (vertex-cut) strategy + NE.
+pub fn table2(
+    cfg: &ExperimentConfig,
+    graph: &KnowledgeGraph,
+    partition_counts: &[usize],
+) -> Table {
+    let mut t = Table::new(
+        "Table 2: Partition statistics (vertex-cut + neighborhood expansion)",
+        &["Dataset", "# partitions", "# core edges", "# total edges", "RF"],
+    );
+    for &p in partition_counts {
+        let mut pcfg = cfg.partition.clone();
+        pcfg.num_partitions = p;
+        let parts = partition::partition_graph(graph, &pcfg, cfg.dataset.seed);
+        let s = pstats::compute(&parts, graph.num_entities);
+        t.row(vec![
+            graph.name.clone(),
+            p.to_string(),
+            s.core_cell(),
+            s.total_cell(),
+            format!("{:.2}", s.replication_factor),
+        ]);
+    }
+    t
+}
+
+/// One trainer-count run for Table 3: train `epochs`, then evaluate.
+pub struct Table3Row {
+    pub trainers: usize,
+    pub mrr: f64,
+    pub hits1: f64,
+    pub hits10: f64,
+    pub epoch_secs_virtual: f64,
+    pub history: RunHistory,
+}
+
+/// Run the Table 3 sweep (accuracy parity + scalability).
+#[allow(clippy::too_many_arguments)]
+pub fn table3_sweep(
+    cfg: &ExperimentConfig,
+    graph: &KnowledgeGraph,
+    runtime: &Runtime,
+    manifest: &Manifest,
+    trainer_counts: &[usize],
+    epochs: usize,
+    eval_every: usize,
+    eval_triples_cap: usize,
+) -> Result<(Table, Vec<Table3Row>)> {
+    let filter = FilterIndex::build(graph);
+    let test: Vec<_> =
+        graph.test.iter().take(eval_triples_cap.max(1)).copied().collect();
+    let mut rows = Vec::new();
+    for &p in trainer_counts {
+        let mut c = cfg.clone();
+        c.train.num_trainers = p;
+        let mut trainer = Trainer::new(c, graph, runtime, manifest.clone())?;
+        crate::log_info!(
+            "table3[{}] P={p}: core edges per worker {:?}",
+            cfg.name,
+            trainer.worker_core_edges()
+        );
+        for e in 0..epochs {
+            let rec = trainer.train_epoch()?;
+            crate::log_info!(
+                "table3[{}] P={p} epoch {e}: loss={:.4} virt={} wall={}",
+                cfg.name,
+                rec.mean_loss,
+                humanize_secs(rec.virtual_secs),
+                humanize_secs(rec.wall_secs)
+            );
+            if eval_every > 0 && (e + 1) % eval_every == 0 && e + 1 < epochs {
+                let m = eval::evaluate(
+                    runtime, manifest, &trainer.params, graph, &filter, &test,
+                )?;
+                trainer.record_eval(m.mrr);
+            }
+        }
+        let m = eval::evaluate(runtime, manifest, &trainer.params, graph, &filter, &test)?;
+        trainer.record_eval(m.mrr);
+        rows.push(Table3Row {
+            trainers: p,
+            mrr: m.mrr,
+            hits1: m.hits1,
+            hits10: m.hits10,
+            epoch_secs_virtual: trainer.history.mean_epoch_virtual_secs(),
+            history: trainer.history.clone(),
+        });
+    }
+    let base = rows
+        .iter()
+        .find(|r| r.trainers == 1)
+        .map(|r| r.epoch_secs_virtual)
+        .unwrap_or_else(|| rows[0].epoch_secs_virtual);
+    let mut t = Table::new(
+        &format!("Table 3: RGCN distributed training on {}", graph.name),
+        &["#Trainers", "MRR", "Hits@1", "Hits@10", "Ep. time (virtual)", "speedup"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.trainers.to_string(),
+            format!("{:.3}", r.mrr),
+            format!("{:.3}", r.hits1),
+            format!("{:.3}", r.hits10),
+            humanize_secs(r.epoch_secs_virtual),
+            if r.trainers == 1 {
+                "-".into()
+            } else {
+                format!("{:.2}x", base / r.epoch_secs_virtual)
+            },
+        ]);
+    }
+    Ok((t, rows))
+}
+
+/// Table 4: fixed number of model updates — fixed batch *count*, so the
+/// per-worker batch size shrinks as P grows.
+pub fn table4(
+    cfg: &ExperimentConfig,
+    graph: &KnowledgeGraph,
+    runtime: &Runtime,
+    manifest: &Manifest,
+    trainer_counts: &[usize],
+    epochs: usize,
+) -> Result<Table> {
+    anyhow::ensure!(cfg.train.batch_edges > 0, "table4 needs mini-batch config");
+    let base_batch = cfg.train.batch_edges;
+    let mut t = Table::new(
+        &format!("Table 4: fixed #model updates on {}", graph.name),
+        &["#Trainers", "Ep. time (virtual)", "Avg #pos edges per batch", "speedup"],
+    );
+    let mut base_time = 0.0;
+    for &p in trainer_counts {
+        let mut c = cfg.clone();
+        c.train.num_trainers = p;
+        // Same number of updates: batch size scales down with P.
+        c.train.batch_edges = (base_batch / p).max(1);
+        let mut trainer = Trainer::new(c.clone(), graph, runtime, manifest.clone())?;
+        for _ in 0..epochs {
+            trainer.train_epoch()?;
+        }
+        let ep = trainer.history.mean_epoch_virtual_secs();
+        if p == trainer_counts[0] {
+            base_time = ep * trainer_counts[0] as f64; // normalize to P=1-ish
+        }
+        t.row(vec![
+            p.to_string(),
+            humanize_secs(ep),
+            c.train.batch_edges.to_string(),
+            if base_time > 0.0 { format!("{:.2}x", base_time / (ep * trainer_counts[0] as f64)) } else { "-".into() },
+        ]);
+        crate::log_info!("table4[{}] P={p}: virt epoch {}", cfg.name, humanize_secs(ep));
+    }
+    Ok(t)
+}
+
+/// Table 5: partitioning-strategy comparison (stats + epoch time) at a
+/// fixed partition count.
+pub fn table5(
+    cfg: &ExperimentConfig,
+    graph: &KnowledgeGraph,
+    runtime: &Runtime,
+    manifest: &Manifest,
+    p: usize,
+    epochs: usize,
+) -> Result<Table> {
+    let mut t = Table::new(
+        &format!("Table 5: partitioning strategies, {p} partitions, {}", graph.name),
+        &["Partitioning", "# core edges", "# total edges", "RF", "Ep. time (virtual)"],
+    );
+    for (label, strategy) in [
+        ("HDRF+NE (KaHIP-sub)", PartitionStrategy::Hdrf),
+        ("Greedy-VP+NE (Metis-sub)", PartitionStrategy::MetisLike),
+        ("Random+NE", PartitionStrategy::Random),
+    ] {
+        let mut c = cfg.clone();
+        c.partition.strategy = strategy;
+        c.train.num_trainers = p;
+        let pcfg = PartitionConfig { num_partitions: p, ..c.partition.clone() };
+        let parts = partition::partition_graph(graph, &pcfg, cfg.dataset.seed);
+        let s = pstats::compute(&parts, graph.num_entities);
+        let mut trainer = Trainer::new(c, graph, runtime, manifest.clone())?;
+        for _ in 0..epochs {
+            trainer.train_epoch()?;
+        }
+        t.row(vec![
+            label.to_string(),
+            s.core_cell(),
+            s.total_cell(),
+            format!("{:.2}", s.replication_factor),
+            humanize_secs(trainer.history.mean_epoch_virtual_secs()),
+        ]);
+        crate::log_info!("table5[{}] {label}: done", cfg.name);
+    }
+    Ok(t)
+}
+
+/// Figure 2: average number of vertices needed to compute one embedding,
+/// as a function of hops.
+pub fn fig2(cfg: &ExperimentConfig, graph: &KnowledgeGraph, max_hops: usize) -> Figure {
+    let mut pcfg = cfg.partition.clone();
+    pcfg.num_partitions = 1;
+    // hops for partitioning don't matter at P=1; reuse config.
+    let parts = partition::partition_graph(graph, &pcfg, cfg.dataset.seed);
+    let ctx = PartContext::new(&parts[0]);
+    let mut fig = Figure::new(
+        "Figure 2: avg vertices per n-hop embedding",
+        "hops",
+        "avg #vertices",
+    );
+    let pts: Vec<(f64, f64)> = (1..=max_hops)
+        .map(|h| (h as f64, avg_closure_size(&ctx, h, 200, cfg.dataset.seed)))
+        .collect();
+    fig.add(&graph.name, pts);
+    fig
+}
+
+/// Figure 6: (a) avg epoch time per trainer count; (b) per-batch
+/// component breakdown. Returns (fig_a, table_b) from Table-3 histories.
+pub fn fig6(rows: &[Table3Row], dataset: &str) -> (Figure, Table) {
+    let mut fig = Figure::new(
+        &format!("Figure 6a: avg epoch time, {dataset}"),
+        "#trainers",
+        "epoch seconds (virtual)",
+    );
+    fig.add(
+        dataset,
+        rows.iter().map(|r| (r.trainers as f64, r.epoch_secs_virtual)).collect(),
+    );
+    let mut t = Table::new(
+        &format!("Figure 6b: avg per-batch component time (virtual s), {dataset}"),
+        &["#Trainers", "getComputeGraph", "GNNmodel (fwd+loss+bwd)", "sync+step", "#batches/epoch"],
+    );
+    for r in rows {
+        let last = r.history.epochs.last().expect("history nonempty");
+        t.row(vec![
+            r.trainers.to_string(),
+            format!("{:.4}", last.avg_compute_graph),
+            format!("{:.4}", last.avg_gnn_model),
+            format!("{:.4}", last.avg_sync_step),
+            last.num_steps.to_string(),
+        ]);
+    }
+    (fig, t)
+}
+
+/// Figure 7: convergence — validation MRR vs virtual time for 1 vs P
+/// trainers, from Table-3 histories (requires eval_every > 0).
+pub fn fig7(rows: &[Table3Row], dataset: &str) -> Figure {
+    let mut fig = Figure::new(
+        &format!("Figure 7: convergence on {dataset}"),
+        "virtual training seconds",
+        "validation MRR",
+    );
+    for r in rows {
+        fig.add(
+            &format!("{} trainers", r.trainers),
+            r.history.eval_points.iter().map(|&(t, _, m)| (t, m)).collect(),
+        );
+    }
+    fig
+}
+
+/// Generate the configured dataset (convenience used by CLI + examples).
+pub fn dataset(cfg: &ExperimentConfig) -> KnowledgeGraph {
+    generator::generate(&cfg.dataset)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    #[test]
+    fn table1_rows_match_graphs() {
+        let cfg = ExperimentConfig::tiny();
+        let g = dataset(&cfg);
+        let t = table1(&[&g]);
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0][1], g.num_entities.to_string());
+    }
+
+    #[test]
+    fn table2_has_row_per_partition_count() {
+        let cfg = ExperimentConfig::tiny();
+        let g = dataset(&cfg);
+        let t = table2(&cfg, &g, &[2, 4, 8]);
+        assert_eq!(t.rows.len(), 3);
+        // RF column increases with partitions
+        let rf: Vec<f64> = t.rows.iter().map(|r| r[4].parse().unwrap()).collect();
+        assert!(rf[0] <= rf[1] && rf[1] <= rf[2]);
+    }
+
+    #[test]
+    fn fig2_is_monotone() {
+        let cfg = ExperimentConfig::tiny();
+        let g = dataset(&cfg);
+        let f = fig2(&cfg, &g, 3);
+        let pts = &f.series[0].points;
+        assert_eq!(pts.len(), 3);
+        assert!(pts[0].1 <= pts[1].1 && pts[1].1 <= pts[2].1);
+    }
+}

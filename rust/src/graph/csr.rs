@@ -1,0 +1,152 @@
+//! CSR (compressed sparse row) adjacency over a triple list.
+//!
+//! The partitioner's neighborhood expansion and the sampler's
+//! compute-graph extraction both need fast "all edges incident to v"
+//! queries. We build two CSR indexes over the *same* edge array: one by
+//! source (out-edges) and one by target (in-edges). Edge identity is the
+//! index into the original triple slice, so callers can map back to
+//! relations and to partition membership.
+
+use super::Triple;
+
+/// Immutable CSR index over a fixed edge list.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    num_vertices: usize,
+    /// Out index: `out_adj[out_off[v]..out_off[v+1]]` = edge ids with s==v.
+    out_off: Vec<u32>,
+    out_adj: Vec<u32>,
+    /// In index: `in_adj[in_off[v]..in_off[v+1]]` = edge ids with t==v.
+    in_off: Vec<u32>,
+    in_adj: Vec<u32>,
+}
+
+impl Csr {
+    /// Build both directions in O(V + E) with counting sort.
+    pub fn build(num_vertices: usize, edges: &[Triple]) -> Csr {
+        let (out_off, out_adj) = index_by(num_vertices, edges, |e| e.s);
+        let (in_off, in_adj) = index_by(num_vertices, edges, |e| e.t);
+        Csr { num_vertices, out_off, out_adj, in_off, in_adj }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    /// Edge ids whose source is `v`.
+    #[inline]
+    pub fn out_edges(&self, v: u32) -> &[u32] {
+        let v = v as usize;
+        &self.out_adj[self.out_off[v] as usize..self.out_off[v + 1] as usize]
+    }
+
+    /// Edge ids whose target is `v`.
+    #[inline]
+    pub fn in_edges(&self, v: u32) -> &[u32] {
+        let v = v as usize;
+        &self.in_adj[self.in_off[v] as usize..self.in_off[v + 1] as usize]
+    }
+
+    #[inline]
+    pub fn out_degree(&self, v: u32) -> usize {
+        self.out_edges(v).len()
+    }
+
+    #[inline]
+    pub fn in_degree(&self, v: u32) -> usize {
+        self.in_edges(v).len()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        self.in_degree(v) + self.out_degree(v)
+    }
+}
+
+fn index_by(num_vertices: usize, edges: &[Triple], vertex: impl Fn(&Triple) -> u32) -> (Vec<u32>, Vec<u32>) {
+    let mut counts = vec![0u32; num_vertices + 1];
+    for e in edges {
+        counts[vertex(e) as usize + 1] += 1;
+    }
+    for i in 1..counts.len() {
+        counts[i] += counts[i - 1];
+    }
+    let off = counts.clone();
+    let mut cursor = counts;
+    let mut adj = vec![0u32; edges.len()];
+    for (eid, e) in edges.iter().enumerate() {
+        let v = vertex(e) as usize;
+        adj[cursor[v] as usize] = eid as u32;
+        cursor[v] += 1;
+    }
+    (off, adj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn edges() -> Vec<Triple> {
+        vec![
+            Triple::new(0, 0, 1),
+            Triple::new(0, 1, 2),
+            Triple::new(1, 0, 2),
+            Triple::new(2, 0, 0),
+            Triple::new(3, 1, 0),
+        ]
+    }
+
+    #[test]
+    fn out_edges_complete_and_correct() {
+        let es = edges();
+        let csr = Csr::build(4, &es);
+        assert_eq!(csr.out_edges(0), &[0, 1]);
+        assert_eq!(csr.out_edges(1), &[2]);
+        assert_eq!(csr.out_edges(2), &[3]);
+        assert_eq!(csr.out_edges(3), &[4]);
+        for v in 0..4u32 {
+            for &eid in csr.out_edges(v) {
+                assert_eq!(es[eid as usize].s, v);
+            }
+        }
+    }
+
+    #[test]
+    fn in_edges_complete_and_correct() {
+        let es = edges();
+        let csr = Csr::build(4, &es);
+        let mut in0: Vec<u32> = csr.in_edges(0).to_vec();
+        in0.sort();
+        assert_eq!(in0, vec![3, 4]);
+        assert_eq!(csr.in_degree(2), 2);
+        assert_eq!(csr.in_degree(3), 0);
+        for v in 0..4u32 {
+            for &eid in csr.in_edges(v) {
+                assert_eq!(es[eid as usize].t, v);
+            }
+        }
+    }
+
+    #[test]
+    fn degrees_sum_to_twice_edges() {
+        let es = edges();
+        let csr = Csr::build(4, &es);
+        let total: usize = (0..4u32).map(|v| csr.degree(v)).sum();
+        assert_eq!(total, 2 * es.len());
+    }
+
+    #[test]
+    fn isolated_vertices_have_empty_slices() {
+        let es = vec![Triple::new(0, 0, 1)];
+        let csr = Csr::build(5, &es);
+        assert!(csr.out_edges(4).is_empty());
+        assert!(csr.in_edges(3).is_empty());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let csr = Csr::build(3, &[]);
+        assert_eq!(csr.num_vertices(), 3);
+        assert!(csr.out_edges(0).is_empty());
+    }
+}

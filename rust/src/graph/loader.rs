@@ -1,0 +1,186 @@
+//! On-disk interchange for datasets: the standard whitespace-separated
+//! triple format used by FB15k-237 distributions (`s<TAB>r<TAB>t`, one
+//! triple per line, numeric ids here), plus a tiny metadata header file
+//! and an optional little-endian f32 feature blob.
+//!
+//! Layout of a dataset directory:
+//! ```text
+//! <dir>/meta.json        {"name":..,"entities":N,"relations":R,"feature_dim":F}
+//! <dir>/train.tsv        one "s\tr\tt" per line
+//! <dir>/valid.tsv
+//! <dir>/test.tsv
+//! <dir>/features.f32     N*F little-endian f32 (only when F > 0)
+//! ```
+
+use super::{KnowledgeGraph, Triple};
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Save a dataset directory (creates it if needed).
+pub fn save(g: &KnowledgeGraph, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    let meta = Json::obj(vec![
+        ("name", Json::Str(g.name.clone())),
+        ("entities", Json::Num(g.num_entities as f64)),
+        ("relations", Json::Num(g.num_relations as f64)),
+        ("feature_dim", Json::Num(g.feature_dim as f64)),
+    ]);
+    std::fs::write(dir.join("meta.json"), meta.to_string_pretty())?;
+    for (name, edges) in [("train", &g.train), ("valid", &g.valid), ("test", &g.test)] {
+        write_tsv(&dir.join(format!("{name}.tsv")), edges)?;
+    }
+    if g.feature_dim > 0 {
+        let mut bytes = Vec::with_capacity(g.features.len() * 4);
+        for &x in &g.features {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(dir.join("features.f32"), bytes)?;
+    }
+    Ok(())
+}
+
+/// Load a dataset directory written by [`save`].
+pub fn load(dir: &Path) -> Result<KnowledgeGraph> {
+    let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+        .with_context(|| format!("reading {dir:?}/meta.json"))?;
+    let meta = json::parse(&meta_text)?;
+    let name = meta.req_str("name")?.to_string();
+    let num_entities = meta.req_usize("entities")?;
+    let num_relations = meta.req_usize("relations")?;
+    let feature_dim = meta.req_usize("feature_dim")?;
+
+    let train = read_tsv(&dir.join("train.tsv"))?;
+    let valid = read_tsv(&dir.join("valid.tsv"))?;
+    let test = read_tsv(&dir.join("test.tsv"))?;
+
+    let features = if feature_dim > 0 {
+        let bytes = std::fs::read(dir.join("features.f32"))?;
+        anyhow::ensure!(
+            bytes.len() == num_entities * feature_dim * 4,
+            "features.f32 has {} bytes, want {}",
+            bytes.len(),
+            num_entities * feature_dim * 4
+        );
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    } else {
+        Vec::new()
+    };
+
+    let g = KnowledgeGraph {
+        name,
+        num_entities,
+        num_relations,
+        train,
+        valid,
+        test,
+        features,
+        feature_dim,
+    };
+    g.check()?;
+    Ok(g)
+}
+
+fn write_tsv(path: &Path, edges: &[Triple]) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    for e in edges {
+        writeln!(w, "{}\t{}\t{}", e.s, e.r, e.t)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn read_tsv(path: &Path) -> Result<Vec<Triple>> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let reader = std::io::BufReader::new(file);
+    let mut out = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let mut parts = trimmed.split_whitespace();
+        let parse = |p: Option<&str>| -> Result<u32> {
+            p.ok_or_else(|| anyhow::anyhow!("{path:?} line {}: too few fields", lineno + 1))?
+                .parse::<u32>()
+                .with_context(|| format!("{path:?} line {}: bad id", lineno + 1))
+        };
+        let s = parse(parts.next())?;
+        let r = parse(parts.next())?;
+        let t = parse(parts.next())?;
+        anyhow::ensure!(
+            parts.next().is_none(),
+            "{path:?} line {}: too many fields",
+            lineno + 1
+        );
+        out.push(Triple::new(s, r, t));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetKind, ExperimentConfig};
+    use crate::graph::generator;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("kgscale-loader-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip_featureless() {
+        let g = generator::generate(&ExperimentConfig::tiny().dataset);
+        let dir = tmpdir("plain");
+        save(&g, &dir).unwrap();
+        let g2 = load(&dir).unwrap();
+        assert_eq!(g.train, g2.train);
+        assert_eq!(g.valid, g2.valid);
+        assert_eq!(g.test, g2.test);
+        assert_eq!(g.num_entities, g2.num_entities);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_with_features() {
+        let mut cfg = ExperimentConfig::tiny().dataset;
+        cfg.kind = DatasetKind::Citation;
+        cfg.relations = 1;
+        cfg.entities = 400;
+        cfg.train_edges = 1500;
+        cfg.feature_dim = 6;
+        let g = generator::generate(&cfg);
+        let dir = tmpdir("feat");
+        save(&g, &dir).unwrap();
+        let g2 = load(&dir).unwrap();
+        assert_eq!(g.features, g2.features);
+        assert_eq!(g.feature_dim, 6);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected() {
+        let dir = tmpdir("bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"name":"x","entities":3,"relations":1,"feature_dim":0}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("train.tsv"), "0\t0\t1\n1 0\n").unwrap();
+        std::fs::write(dir.join("valid.tsv"), "").unwrap();
+        std::fs::write(dir.join("test.tsv"), "").unwrap();
+        assert!(load(&dir).is_err());
+        std::fs::write(dir.join("train.tsv"), "0\t0\t9\n").unwrap(); // id out of range
+        assert!(load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

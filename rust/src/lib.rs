@@ -1,0 +1,30 @@
+//! # kgscale
+//!
+//! Reproduction of *"Scaling Knowledge Graph Embedding Models"* (Sheikh
+//! et al., 2022): distributed data-parallel training of GNN-based
+//! knowledge-graph embedding models (RGCN encoder + DistMult decoder) for
+//! link prediction, built on self-sufficient vertex-cut partitions,
+//! constraint-based negative sampling, and edge mini-batch training.
+//!
+//! Architecture (see DESIGN.md): this Rust crate is the Layer-3
+//! coordinator — partitioning, sampling, batching, the data-parallel
+//! trainer with ring AllReduce, evaluation, and all experiment harnesses.
+//! The numerical model (Layer 2: JAX RGCN/DistMult; Layer 1: Pallas
+//! kernels) is AOT-compiled by `python/compile/aot.py` into
+//! `artifacts/*.hlo.txt`, which `runtime` loads and executes through the
+//! PJRT C API. Python never runs on the training path.
+
+pub mod cli;
+pub mod config;
+pub mod eval;
+pub mod experiments;
+pub mod graph;
+pub mod metrics;
+pub mod model;
+pub mod partition;
+pub mod report;
+pub mod runtime;
+pub mod sampler;
+pub mod testing;
+pub mod train;
+pub mod util;

@@ -1,0 +1,245 @@
+//! `kgscale` — leader entrypoint. See `cli::USAGE`.
+
+use anyhow::{bail, Context, Result};
+use kgscale::cli::{Args, USAGE};
+use kgscale::config::ExperimentConfig;
+use kgscale::model::Manifest;
+use kgscale::runtime::Runtime;
+use kgscale::train::plan::{plan_buckets, plan_to_json};
+use kgscale::train::Trainer;
+use kgscale::{eval, experiments, graph, log_info, report};
+use std::path::Path;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    }
+    match run(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(path),
+        None => Ok(ExperimentConfig::tiny()),
+    }
+}
+
+fn artifacts_dir(args: &Args, cfg: &ExperimentConfig) -> std::path::PathBuf {
+    match args.get("artifacts") {
+        Some(d) => Path::new(d).to_path_buf(),
+        None => Path::new(&cfg.runtime.artifacts_dir).join(&cfg.runtime.model_key),
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "info" => cmd_info(&args),
+        "generate" => cmd_generate(&args),
+        "plan" => cmd_plan(&args),
+        "partition" => cmd_partition(&args),
+        "train" => cmd_train(&args),
+        "experiment" => cmd_experiment(&args),
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let dir = artifacts_dir(args, &cfg);
+    args.finish()?;
+    println!("config: {} (dataset {} entities, {} relations)", cfg.name, cfg.dataset.entities, cfg.dataset.relations);
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {dir:?} — {} params, {} entries", m.param_count, m.entries.len());
+            for e in &m.entries {
+                println!("  {e:?}");
+            }
+        }
+        Err(e) => println!("artifacts: not available ({e})"),
+    }
+    let rt = Runtime::new(&dir);
+    match rt {
+        Ok(rt) => println!("pjrt: platform={}", rt.platform()),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let out = args.get("out").map(String::from).unwrap_or_else(|| format!("data/{}", cfg.name));
+    args.finish()?;
+    let g = experiments::dataset(&cfg);
+    graph::loader::save(&g, Path::new(&out))?;
+    let t = experiments::table1(&[&g]);
+    println!("{}", t.to_markdown());
+    log_info!("wrote dataset to {out}");
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let trainers = args.get_usize_list("trainers", &[1, 2, 4, 8])?;
+    let out = args
+        .get("out")
+        .map(String::from)
+        .unwrap_or_else(|| format!("python/compile/plans/{}.json", cfg.name));
+    args.finish()?;
+    let g = experiments::dataset(&cfg);
+    let plan = plan_buckets(&cfg, &g, &trainers)?;
+    let json = plan_to_json(&cfg, &plan);
+    if let Some(parent) = Path::new(&out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&out, json.to_string_pretty()).with_context(|| format!("writing {out}"))?;
+    println!(
+        "plan[{}]: {} train buckets, encode ({}, {}), wrote {out}",
+        cfg.name,
+        plan.train_buckets.len(),
+        plan.encode_nodes,
+        plan.encode_edges
+    );
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let mut cfg = load_config(args)?;
+    let p = args.get_usize("partitions", 4)?;
+    if let Some(s) = args.get("strategy") {
+        cfg.partition.strategy = kgscale::config::PartitionStrategy::from_str(s)?;
+    }
+    args.finish()?;
+    let g = experiments::dataset(&cfg);
+    let t = experiments::table2(&cfg, &g, &[p]);
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = load_config(args)?;
+    cfg.train.num_trainers = args.get_usize("trainers", cfg.train.num_trainers)?;
+    let epochs = args.get_usize("epochs", cfg.train.epochs)?;
+    let eval_every = args.get_usize("eval-every", cfg.train.eval_every)?;
+    let dir = artifacts_dir(args, &cfg);
+    args.finish()?;
+
+    let g = experiments::dataset(&cfg);
+    let manifest = Manifest::load(&dir)?;
+    let runtime = Runtime::new(&dir)?;
+    let filter = eval::FilterIndex::build(&g);
+    let mut trainer = Trainer::new(cfg.clone(), &g, &runtime, manifest.clone())?;
+    log_info!(
+        "training {}: P={} epochs={epochs} core edges per worker {:?}",
+        cfg.name,
+        trainer.num_workers(),
+        trainer.worker_core_edges()
+    );
+    for e in 0..epochs {
+        let rec = trainer.train_epoch()?;
+        println!(
+            "epoch {e:>3}: loss={:.4} virtual={:.3}s wall={:.3}s (cg {:.4}s, model {:.4}s, sync {:.4}s per batch)",
+            rec.mean_loss,
+            rec.virtual_secs,
+            rec.wall_secs,
+            rec.avg_compute_graph,
+            rec.avg_gnn_model,
+            rec.avg_sync_step
+        );
+        if eval_every > 0 && (e + 1) % eval_every == 0 {
+            let m = eval::evaluate(&runtime, &manifest, &trainer.params, &g, &filter, &g.valid)?;
+            trainer.record_eval(m.mrr);
+            println!("  valid MRR={:.4} Hits@1={:.4} Hits@10={:.4}", m.mrr, m.hits1, m.hits10);
+        }
+    }
+    let m = eval::evaluate(&runtime, &manifest, &trainer.params, &g, &filter, &g.test)?;
+    println!(
+        "TEST: MRR={:.4} Hits@1={:.4} Hits@3={:.4} Hits@10={:.4} ({} queries)",
+        m.mrr, m.hits1, m.hits3, m.hits10, m.num_queries
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all")
+        .to_string();
+    let cfg = load_config(args)?;
+    let trainers = args.get_usize_list("trainers", &[1, 2, 4, 8])?;
+    let epochs = args.get_usize("epochs", cfg.train.epochs)?;
+    let eval_every = args.get_usize("eval-every", 0)?;
+    let eval_cap = args.get_usize("eval-cap", 500)?;
+    let dir = artifacts_dir(args, &cfg);
+    args.finish()?;
+
+    let g = experiments::dataset(&cfg);
+    let mut out = String::new();
+
+    // Pure-graph experiments need no artifacts.
+    if matches!(which.as_str(), "table1" | "all") {
+        out.push_str(&experiments::table1(&[&g]).to_markdown());
+    }
+    if matches!(which.as_str(), "table2" | "all") {
+        out.push_str(&experiments::table2(&cfg, &g, &trainers).to_markdown());
+    }
+    if matches!(which.as_str(), "fig2" | "all") {
+        let f = experiments::fig2(&cfg, &g, 3);
+        out.push_str(&f.to_ascii());
+        report::save_report(&format!("fig2_{}.csv", cfg.name), &f.to_csv())?;
+    }
+
+    if matches!(which.as_str(), "table3" | "table4" | "table5" | "fig6" | "fig7" | "all") {
+        let manifest = Manifest::load(&dir)?;
+        let runtime = Runtime::new(&dir)?;
+        if matches!(which.as_str(), "table3" | "fig6" | "fig7" | "all") {
+            let ev = if matches!(which.as_str(), "fig7" | "all") && eval_every == 0 {
+                (epochs / 5).max(1)
+            } else {
+                eval_every
+            };
+            let (t3, rows) = experiments::table3_sweep(
+                &cfg, &g, &runtime, &manifest, &trainers, epochs, ev, eval_cap,
+            )?;
+            out.push_str(&t3.to_markdown());
+            let (f6a, f6b) = experiments::fig6(&rows, &g.name);
+            out.push_str(&f6a.to_ascii());
+            out.push_str(&f6b.to_markdown());
+            let f7 = experiments::fig7(&rows, &g.name);
+            out.push_str(&f7.to_ascii());
+            report::save_report(&format!("fig6a_{}.csv", cfg.name), &f6a.to_csv())?;
+            report::save_report(&format!("fig7_{}.csv", cfg.name), &f7.to_csv())?;
+        }
+        if matches!(which.as_str(), "table4" | "all") && cfg.train.batch_edges > 0 {
+            out.push_str(
+                &experiments::table4(&cfg, &g, &runtime, &manifest, &trainers, epochs)?
+                    .to_markdown(),
+            );
+        }
+        if matches!(which.as_str(), "table5" | "all") {
+            let p = trainers.iter().copied().find(|&p| p == 4).unwrap_or(trainers[0]);
+            out.push_str(
+                &experiments::table5(&cfg, &g, &runtime, &manifest, p, epochs)?.to_markdown(),
+            );
+        }
+    }
+
+    println!("{out}");
+    let path = report::save_report(&format!("{}_{}.md", which, cfg.name), &out)?;
+    log_info!("saved report to {path:?}");
+    Ok(())
+}

@@ -1,0 +1,264 @@
+//! `artifacts/<cfg>/manifest.json` parsing — the single source of truth
+//! for what was AOT-compiled: model hyperparameters, the flat parameter
+//! layout (name/shape/offset/init), and every lowered entry point with
+//! its padded shapes.
+
+use crate::util::json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    /// "xavier_uniform" | "zeros"
+    pub init: String,
+    pub fan_in: usize,
+    pub fan_out: usize,
+}
+
+#[derive(Clone, Debug)]
+pub enum EntryInfo {
+    TrainStep { file: String, nodes: usize, edges: usize, triples: usize },
+    Encode { file: String, nodes: usize, edges: usize },
+    Score { file: String, queries: usize, nodes: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    /// "embedding" | "provided"
+    pub mode: String,
+    pub entities: usize,
+    pub relations: usize,
+    pub embed_dim: usize,
+    pub num_bases: usize,
+    pub num_layers: usize,
+    pub feature_dim: usize,
+    pub dropout: f64,
+    pub param_count: usize,
+    pub params: Vec<ParamInfo>,
+    pub entries: Vec<EntryInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        Self::parse(&text).with_context(|| format!("parsing {path:?}"))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = json::parse(text)?;
+        let version = j.req_usize("version")?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let model = j.req("model")?;
+        let mut params = Vec::new();
+        for p in j.req_arr("params")? {
+            params.push(ParamInfo {
+                name: p.req_str("name")?.to_string(),
+                shape: p
+                    .req_arr("shape")?
+                    .iter()
+                    .map(|x| x.as_usize().context("bad shape element"))
+                    .collect::<Result<_>>()?,
+                offset: p.req_usize("offset")?,
+                size: p.req_usize("size")?,
+                init: p.req_str("init")?.to_string(),
+                fan_in: p.req_usize("fan_in")?,
+                fan_out: p.req_usize("fan_out")?,
+            });
+        }
+        let mut entries = Vec::new();
+        for e in j.req_arr("entries")? {
+            let file = e.req_str("file")?.to_string();
+            match e.req_str("kind")? {
+                "train_step" => entries.push(EntryInfo::TrainStep {
+                    file,
+                    nodes: e.req_usize("nodes")?,
+                    edges: e.req_usize("edges")?,
+                    triples: e.req_usize("triples")?,
+                }),
+                "encode" => entries.push(EntryInfo::Encode {
+                    file,
+                    nodes: e.req_usize("nodes")?,
+                    edges: e.req_usize("edges")?,
+                }),
+                "score" => entries.push(EntryInfo::Score {
+                    file,
+                    queries: e.req_usize("queries")?,
+                    nodes: e.req_usize("nodes")?,
+                }),
+                other => anyhow::bail!("unknown entry kind {other:?}"),
+            }
+        }
+        let m = Manifest {
+            name: j.req_str("name")?.to_string(),
+            mode: j.req_str("mode")?.to_string(),
+            entities: model.req_usize("entities")?,
+            relations: model.req_usize("relations")?,
+            embed_dim: model.req_usize("embed_dim")?,
+            num_bases: model.req_usize("num_bases")?,
+            num_layers: model.req_usize("num_layers")?,
+            feature_dim: model.req_usize("feature_dim")?,
+            dropout: model.req("dropout")?.as_f64().context("dropout")?,
+            param_count: j.req_usize("param_count")?,
+            params,
+            entries,
+        };
+        m.check()?;
+        Ok(m)
+    }
+
+    /// Layout sanity: params must exactly tile [0, param_count).
+    pub fn check(&self) -> Result<()> {
+        let mut off = 0;
+        for p in &self.params {
+            anyhow::ensure!(
+                p.offset == off,
+                "param {} at offset {} (expected {off})",
+                p.name,
+                p.offset
+            );
+            let numel: usize = p.shape.iter().product();
+            anyhow::ensure!(numel == p.size, "param {} size mismatch", p.name);
+            off += p.size;
+        }
+        anyhow::ensure!(
+            off == self.param_count,
+            "params tile {off} floats but param_count is {}",
+            self.param_count
+        );
+        anyhow::ensure!(
+            matches!(self.mode.as_str(), "embedding" | "provided"),
+            "bad mode {}",
+            self.mode
+        );
+        Ok(())
+    }
+
+    /// Smallest train_step bucket fitting (nodes, edges, triples); cost
+    /// model = padded edge count (the step's dominant term), then triples.
+    pub fn pick_train_bucket(
+        &self,
+        nodes: usize,
+        edges: usize,
+        triples: usize,
+    ) -> Option<&EntryInfo> {
+        self.entries
+            .iter()
+            .filter(|e| match e {
+                EntryInfo::TrainStep { nodes: n, edges: ee, triples: b, .. } => {
+                    *n >= nodes && *ee >= edges && *b >= triples
+                }
+                _ => false,
+            })
+            .min_by_key(|e| match e {
+                EntryInfo::TrainStep { edges, triples, .. } => (*edges, *triples),
+                _ => unreachable!(),
+            })
+    }
+
+    pub fn encode_entry(&self) -> Result<(&str, usize, usize)> {
+        for e in &self.entries {
+            if let EntryInfo::Encode { file, nodes, edges } = e {
+                return Ok((file, *nodes, *edges));
+            }
+        }
+        anyhow::bail!("manifest has no encode entry")
+    }
+
+    pub fn score_entry(&self) -> Result<(&str, usize, usize)> {
+        for e in &self.entries {
+            if let EntryInfo::Score { file, queries, nodes } = e {
+                return Ok((file, *queries, *nodes));
+            }
+        }
+        anyhow::bail!("manifest has no score entry")
+    }
+
+    pub fn param(&self, name: &str) -> Result<&ParamInfo> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .with_context(|| format!("manifest has no param {name:?}"))
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    pub(crate) const SAMPLE: &str = r#"{
+      "version": 1, "name": "tiny", "mode": "embedding",
+      "model": {"entities": 300, "relations": 8, "embed_dim": 16,
+                "num_bases": 2, "num_layers": 2, "feature_dim": 0,
+                "dropout": 0.0},
+      "param_count": 152,
+      "params": [
+        {"name": "ent_emb", "shape": [8, 16], "offset": 0, "size": 128,
+         "init": "xavier_uniform", "fan_in": 16, "fan_out": 16},
+        {"name": "bias_0", "shape": [16], "offset": 128, "size": 16,
+         "init": "zeros", "fan_in": 16, "fan_out": 16},
+        {"name": "rel_dec", "shape": [8], "offset": 144, "size": 8,
+         "init": "xavier_uniform", "fan_in": 4, "fan_out": 4}
+      ],
+      "entries": [
+        {"kind": "train_step", "file": "a.hlo.txt", "nodes": 320,
+         "edges": 8192, "triples": 8192},
+        {"kind": "train_step", "file": "b.hlo.txt", "nodes": 320,
+         "edges": 4096, "triples": 2048},
+        {"kind": "encode", "file": "e.hlo.txt", "nodes": 320, "edges": 8192},
+        {"kind": "score", "file": "s.hlo.txt", "queries": 256, "nodes": 320}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_checks_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.entries.len(), 4);
+        assert_eq!(m.param("bias_0").unwrap().init, "zeros");
+        assert!(m.param("nope").is_err());
+    }
+
+    #[test]
+    fn bucket_selection_prefers_smallest_fit() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        match m.pick_train_bucket(100, 3000, 1000).unwrap() {
+            EntryInfo::TrainStep { file, .. } => assert_eq!(file, "b.hlo.txt"),
+            _ => panic!(),
+        }
+        match m.pick_train_bucket(100, 5000, 1000).unwrap() {
+            EntryInfo::TrainStep { file, .. } => assert_eq!(file, "a.hlo.txt"),
+            _ => panic!(),
+        }
+        assert!(m.pick_train_bucket(100, 9000, 1000).is_none());
+        assert!(m.pick_train_bucket(400, 100, 100).is_none());
+    }
+
+    #[test]
+    fn layout_gaps_are_rejected() {
+        let broken = SAMPLE.replace("\"offset\": 128", "\"offset\": 130");
+        assert!(Manifest::parse(&broken).is_err());
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let broken = SAMPLE.replace("\"version\": 1", "\"version\": 99");
+        assert!(Manifest::parse(&broken).is_err());
+    }
+
+    #[test]
+    fn encode_and_score_lookup() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let (f, n, e) = m.encode_entry().unwrap();
+        assert_eq!((f, n, e), ("e.hlo.txt", 320, 8192));
+        let (f, q, n) = m.score_entry().unwrap();
+        assert_eq!((f, q, n), ("s.hlo.txt", 256, 320));
+    }
+}

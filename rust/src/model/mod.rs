@@ -1,0 +1,10 @@
+//! Model-side glue on the Rust side: the artifact manifest (the L2⇄L3
+//! contract written by `python/compile/aot.py`), flat-parameter
+//! initialization matching the manifest's init specs, and size-bucket
+//! selection for padded entry points.
+
+pub mod manifest;
+pub mod params;
+
+pub use manifest::{EntryInfo, Manifest, ParamInfo};
+pub use params::init_params;

@@ -1,0 +1,164 @@
+//! Edge-cut (vertex-partitioning) baseline — the METIS stand-in.
+//!
+//! The paper's §4.5.5 comparison partitions *vertices* with METIS and
+//! then takes "the first hop neighbors of vertices [as] the core edges of
+//! a partition". We reproduce that pipeline with a greedy BFS-grow
+//! vertex partitioner in the spirit of multilevel/LDG partitioners:
+//! grow P balanced vertex sets region-by-region (BFS from seeds, picking
+//! the frontier vertex with the most already-assigned neighbors — the
+//! same "minimize cut" greedy objective METIS optimizes), then assign
+//! each train edge to the partition that owns its *source* vertex.
+//!
+//! The failure mode the paper exploits is structural, not METIS-specific:
+//! a vertex partition's 1-hop core edges replicate every cut edge into
+//! two partitions' neighborhoods, and neighborhood expansion then blows
+//! the partitions up ("approximately 33% larger ... increases the
+//! training time by approximately 21%"). Any reasonable balanced vertex
+//! partitioner reproduces it; ours yields the same shape.
+
+use super::EdgeAssignment;
+use crate::graph::{Csr, KnowledgeGraph};
+use crate::util::rng::Rng;
+use std::collections::BinaryHeap;
+
+/// Greedy BFS-grow vertex partitioning + source-vertex edge assignment.
+pub fn metis_like(g: &KnowledgeGraph, num_partitions: usize, seed: u64) -> EdgeAssignment {
+    let owner = partition_vertices(g, num_partitions, seed);
+    // Edge -> partition of its source vertex ("first hop neighbors of
+    // vertices are the core edges", §4.5.5).
+    let assignment = g.train.iter().map(|e| owner[e.s as usize]).collect();
+    EdgeAssignment { num_partitions, assignment }
+}
+
+/// Balanced greedy region growing. Returns owner[vertex] -> partition.
+pub fn partition_vertices(g: &KnowledgeGraph, num_partitions: usize, seed: u64) -> Vec<u32> {
+    let n = g.num_entities;
+    let p = num_partitions;
+    let csr = Csr::build(n, &g.train);
+    let target = n.div_ceil(p);
+    let mut owner = vec![u32::MAX; n];
+    let mut sizes = vec![0usize; p];
+    let mut rng = Rng::seeded(seed);
+
+    // Seed each region at a random unassigned vertex, round-robin grow.
+    // Frontier heaps are keyed by "gain" = number of already-owned
+    // neighbors in this region (greedy min-cut).
+    let mut heaps: Vec<BinaryHeap<(i64, u32)>> = vec![BinaryHeap::new(); p];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut seed_cursor = 0usize;
+
+    let neighbors = |v: u32, csr: &Csr| -> Vec<u32> {
+        let mut out = Vec::with_capacity(csr.degree(v));
+        for &eid in csr.out_edges(v) {
+            out.push(g.train[eid as usize].t);
+        }
+        for &eid in csr.in_edges(v) {
+            out.push(g.train[eid as usize].s);
+        }
+        out
+    };
+
+    let mut assigned = 0usize;
+    while assigned < n {
+        for part in 0..p {
+            if assigned >= n || sizes[part] >= target {
+                continue;
+            }
+            // Pop the best unassigned frontier vertex; reseed if empty.
+            let v = loop {
+                match heaps[part].pop() {
+                    Some((_, v)) if owner[v as usize] == u32::MAX => break Some(v),
+                    Some(_) => continue, // stale entry
+                    None => {
+                        // find a fresh seed
+                        let mut found = None;
+                        while seed_cursor < n {
+                            let cand = order[seed_cursor];
+                            seed_cursor += 1;
+                            if owner[cand as usize] == u32::MAX {
+                                found = Some(cand);
+                                break;
+                            }
+                        }
+                        break found;
+                    }
+                }
+            };
+            let Some(v) = v else { continue };
+            owner[v as usize] = part as u32;
+            sizes[part] += 1;
+            assigned += 1;
+            // Push neighbors with updated gains.
+            for w in neighbors(v, &csr) {
+                if owner[w as usize] == u32::MAX {
+                    let gain = neighbors(w, &csr)
+                        .iter()
+                        .filter(|&&x| owner[x as usize] == part as u32)
+                        .count() as i64;
+                    heaps[part].push((gain, w));
+                }
+            }
+        }
+    }
+    owner
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::graph::generator;
+
+    fn graph() -> KnowledgeGraph {
+        let mut cfg = ExperimentConfig::tiny().dataset;
+        cfg.entities = 600;
+        cfg.train_edges = 5000;
+        generator::generate(&cfg)
+    }
+
+    #[test]
+    fn vertex_partition_is_total_and_balanced() {
+        let g = graph();
+        let owner = partition_vertices(&g, 4, 3);
+        assert!(owner.iter().all(|&o| o < 4));
+        let mut sizes = [0usize; 4];
+        for &o in &owner {
+            sizes[o as usize] += 1;
+        }
+        let max = *sizes.iter().max().unwrap() as f64;
+        let min = *sizes.iter().min().unwrap() as f64;
+        assert!(max / min < 1.5, "vertex balance too skewed: {sizes:?}");
+    }
+
+    #[test]
+    fn edges_follow_source_owner() {
+        let g = graph();
+        let owner = partition_vertices(&g, 4, 3);
+        let a = metis_like(&g, 4, 3);
+        for (i, e) in g.train.iter().enumerate() {
+            assert_eq!(a.assignment[i], owner[e.s as usize]);
+        }
+    }
+
+    #[test]
+    fn locality_better_than_random() {
+        // Fraction of edges whose both endpoints share a partition should
+        // beat the random-expected 1/P.
+        let g = graph();
+        let owner = partition_vertices(&g, 4, 3);
+        let internal = g
+            .train
+            .iter()
+            .filter(|e| owner[e.s as usize] == owner[e.t as usize])
+            .count() as f64
+            / g.train.len() as f64;
+        assert!(internal > 0.3, "greedy grow found no locality: internal={internal:.3}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = graph();
+        assert_eq!(metis_like(&g, 4, 5).assignment, metis_like(&g, 4, 5).assignment);
+    }
+}

@@ -1,0 +1,295 @@
+//! Neighborhood expansion (paper §3.2.2): make each partition
+//! self-sufficient by adding the n-hop dependency closure of its core
+//! vertices as *support* vertices and edges, so message passing for any
+//! core edge never needs another partition.
+//!
+//! Semantics (matching the model in `python/compile/model.py`, which adds
+//! inverse relations so messages flow along both edge directions):
+//!
+//! * a vertex at undirected distance `d ≤ n` from a core vertex is needed
+//!   (its hidden state h^(n-d) feeds some core embedding);
+//! * an edge is needed iff one of its endpoints is at distance `≤ n-1`
+//!   (that endpoint still receives messages).
+//!
+//! Support edges may be core edges *of another partition* — that is the
+//! data replication / redundant computation the paper trades for zero
+//! communication.
+
+use super::{EdgeAssignment, Partition, VertexRole};
+use crate::graph::{Csr, KnowledgeGraph};
+
+/// Expand every partition of `assignment` to `hops`-hop self-sufficiency.
+pub fn expand(g: &KnowledgeGraph, assignment: &EdgeAssignment, hops: usize) -> Vec<Partition> {
+    assert_eq!(assignment.assignment.len(), g.train.len());
+    let p = assignment.num_partitions;
+    let csr = Csr::build(g.num_entities, &g.train);
+
+    // How many partitions hold each vertex as a core endpoint — needed to
+    // distinguish Core from Replicated roles.
+    let mut core_part_count = vec![0u32; g.num_entities];
+    {
+        let mut last_seen = vec![u32::MAX; g.num_entities];
+        for (eid, e) in g.train.iter().enumerate() {
+            let part = assignment.assignment[eid];
+            for v in [e.s, e.t] {
+                if last_seen[v as usize] != part {
+                    last_seen[v as usize] = part;
+                    core_part_count[v as usize] += 1;
+                }
+            }
+        }
+        // last_seen dedupes consecutive hits only; recompute exactly with
+        // a bitset pass when P is small enough to matter. Simpler: exact
+        // recount below.
+        core_part_count.iter_mut().for_each(|c| *c = 0);
+        let words = p.div_ceil(64);
+        let mut bits = vec![0u64; g.num_entities * words];
+        for (eid, e) in g.train.iter().enumerate() {
+            let part = assignment.assignment[eid] as usize;
+            for v in [e.s as usize, e.t as usize] {
+                bits[v * words + part / 64] |= 1 << (part % 64);
+            }
+        }
+        for v in 0..g.num_entities {
+            core_part_count[v] =
+                bits[v * words..(v + 1) * words].iter().map(|w| w.count_ones()).sum();
+        }
+    }
+
+    (0..p).map(|part| expand_one(g, &csr, assignment, part, hops, &core_part_count)).collect()
+}
+
+fn expand_one(
+    g: &KnowledgeGraph,
+    csr: &Csr,
+    assignment: &EdgeAssignment,
+    part: usize,
+    hops: usize,
+    core_part_count: &[u32],
+) -> Partition {
+    const UNSEEN: u32 = u32::MAX;
+    let mut dist = vec![UNSEEN; g.num_entities];
+    let mut frontier: Vec<u32> = Vec::new();
+    let mut core_edges = Vec::new();
+
+    // Distance-0 layer: endpoints of this partition's core edges.
+    for (eid, e) in g.train.iter().enumerate() {
+        if assignment.assignment[eid] as usize == part {
+            core_edges.push(*e);
+            for v in [e.s, e.t] {
+                if dist[v as usize] == UNSEEN {
+                    dist[v as usize] = 0;
+                    frontier.push(v);
+                }
+            }
+        }
+    }
+
+    // BFS out to `hops`, collecting needed edges: an edge is needed when
+    // first touched from an endpoint at distance <= hops-1.
+    let mut needed_edges: Vec<bool> = vec![false; g.train.len()];
+    let mut vertices: Vec<u32> = frontier.clone();
+    let mut current = frontier;
+    for d in 0..hops as u32 {
+        let mut next: Vec<u32> = Vec::new();
+        for &v in &current {
+            debug_assert_eq!(dist[v as usize], d);
+            for &eid in csr.out_edges(v).iter().chain(csr.in_edges(v)) {
+                needed_edges[eid as usize] = true;
+                let e = g.train[eid as usize];
+                let w = if e.s == v { e.t } else { e.s };
+                if dist[w as usize] == UNSEEN {
+                    dist[w as usize] = d + 1;
+                    next.push(w);
+                    vertices.push(w);
+                }
+            }
+        }
+        current = next;
+    }
+
+    // Support edges: needed but not core-of-this-partition.
+    let mut support_edges = Vec::new();
+    for (eid, &needed) in needed_edges.iter().enumerate() {
+        if needed && assignment.assignment[eid] as usize != part {
+            support_edges.push(g.train[eid]);
+        }
+    }
+
+    vertices.sort_unstable();
+    let roles = vertices
+        .iter()
+        .map(|&v| {
+            if dist[v as usize] == 0 {
+                if core_part_count[v as usize] > 1 {
+                    VertexRole::Replicated
+                } else {
+                    VertexRole::Core
+                }
+            } else {
+                VertexRole::Support
+            }
+        })
+        .collect();
+
+    Partition { id: part, vertices, roles, core_edges, support_edges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, PartitionConfig, PartitionStrategy};
+    use crate::graph::{generator, Triple};
+    use crate::partition;
+    use std::collections::HashSet;
+
+    fn graph() -> KnowledgeGraph {
+        let mut cfg = ExperimentConfig::tiny().dataset;
+        cfg.entities = 400;
+        cfg.train_edges = 3000;
+        generator::generate(&cfg)
+    }
+
+    fn parts(hops: usize) -> (KnowledgeGraph, Vec<Partition>) {
+        let g = graph();
+        let cfg = PartitionConfig {
+            strategy: PartitionStrategy::Hdrf,
+            num_partitions: 4,
+            hops,
+            hdrf_lambda: 1.0,
+        };
+        let ps = partition::partition_graph(&g, &cfg, 11);
+        (g, ps)
+    }
+
+    /// The paper's self-sufficiency invariant: every vertex within
+    /// distance < hops of a core vertex has ALL its incident edges in the
+    /// partition (so its message aggregation is complete locally).
+    #[test]
+    fn expansion_is_self_sufficient() {
+        let (g, ps) = parts(2);
+        let csr = Csr::build(g.num_entities, &g.train);
+        for p in &ps {
+            let edge_set: HashSet<u64> =
+                p.core_edges.iter().chain(&p.support_edges).map(Triple::key).collect();
+            // Recompute distances within the partition's own BFS.
+            let mut dist = std::collections::HashMap::new();
+            for e in &p.core_edges {
+                dist.insert(e.s, 0u32);
+                dist.insert(e.t, 0u32);
+            }
+            let mut frontier: Vec<u32> = dist.keys().copied().collect();
+            for d in 0..1u32 {
+                // need full edges for vertices at distance <= hops-1 = 1
+                let mut next = Vec::new();
+                for &v in &frontier {
+                    for &eid in csr.out_edges(v).iter().chain(csr.in_edges(v)) {
+                        let e = g.train[eid as usize];
+                        let w = if e.s == v { e.t } else { e.s };
+                        if !dist.contains_key(&w) {
+                            dist.insert(w, d + 1);
+                            next.push(w);
+                        }
+                    }
+                }
+                frontier = next;
+            }
+            for (&v, &d) in &dist {
+                if d <= 1 {
+                    for &eid in csr.out_edges(v).iter().chain(csr.in_edges(v)) {
+                        let e = g.train[eid as usize];
+                        assert!(
+                            edge_set.contains(&e.key()),
+                            "partition {} missing edge {e:?} incident to dist-{d} vertex {v}",
+                            p.id
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_edge_endpoints_are_in_vertex_set() {
+        let (_, ps) = parts(2);
+        for p in &ps {
+            for e in p.core_edges.iter().chain(&p.support_edges) {
+                assert!(p.local_of(e.s).is_some(), "missing endpoint {}", e.s);
+                assert!(p.local_of(e.t).is_some(), "missing endpoint {}", e.t);
+            }
+        }
+    }
+
+    #[test]
+    fn roles_are_consistent() {
+        let (_, ps) = parts(2);
+        // Count, per vertex, the partitions where it has role Core/Replicated.
+        let mut count: std::collections::HashMap<u32, u32> = Default::default();
+        for p in &ps {
+            for (v, role) in p.vertices.iter().zip(&p.roles) {
+                if !matches!(role, VertexRole::Support) {
+                    *count.entry(*v).or_default() += 1;
+                }
+            }
+        }
+        for p in &ps {
+            for (v, role) in p.vertices.iter().zip(&p.roles) {
+                match role {
+                    VertexRole::Core => assert_eq!(count[v], 1, "Core vertex {v} in >1 partition"),
+                    VertexRole::Replicated => {
+                        assert!(count[v] > 1, "Replicated vertex {v} in only one partition")
+                    }
+                    VertexRole::Support => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn support_edges_disjoint_from_core() {
+        let (_, ps) = parts(2);
+        for p in &ps {
+            let core: HashSet<u64> = p.core_edges.iter().map(Triple::key).collect();
+            for e in &p.support_edges {
+                assert!(!core.contains(&e.key()));
+            }
+        }
+    }
+
+    #[test]
+    fn more_hops_means_no_smaller_partitions() {
+        let g = graph();
+        for strategy in [PartitionStrategy::Hdrf, PartitionStrategy::Random] {
+            let mk = |hops| {
+                let cfg = PartitionConfig { strategy, num_partitions: 4, hops, hdrf_lambda: 1.0 };
+                partition::partition_graph(&g, &cfg, 11)
+            };
+            let one = mk(1);
+            let two = mk(2);
+            for (a, b) in one.iter().zip(&two) {
+                assert!(b.total_edges() >= a.total_edges());
+                assert!(b.vertices.len() >= a.vertices.len());
+            }
+        }
+    }
+
+    #[test]
+    fn zero_hops_adds_nothing() {
+        let g = graph();
+        let a = partition::assign_edges(
+            &g,
+            &PartitionConfig {
+                strategy: PartitionStrategy::Hdrf,
+                num_partitions: 4,
+                hops: 2,
+                hdrf_lambda: 1.0,
+            },
+            11,
+        );
+        let ps = expand(&g, &a, 0);
+        for p in &ps {
+            assert!(p.support_edges.is_empty());
+            assert!(p.roles.iter().all(|r| !matches!(r, VertexRole::Support)));
+        }
+    }
+}

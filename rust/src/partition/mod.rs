@@ -1,0 +1,170 @@
+//! Graph partitioning for distributed training (paper §3.2).
+//!
+//! The pipeline is two-phase, exactly as in the paper:
+//!
+//! 1. **Partitioning** — divide the *train edges* into `P` disjoint sets
+//!    ("core edges"). Strategies:
+//!    * [`vertex_cut`] — HDRF and DBH streaming vertex-cut partitioners
+//!      (replication-minimizing, balanced — the KaHIP stand-in);
+//!    * [`edge_cut`] — greedy vertex partitioning whose 1-hop edges form
+//!      the core set (the METIS stand-in, reproducing edge replication);
+//!    * [`random`] — uniform random edge assignment (paper baseline).
+//! 2. **Neighborhood expansion** ([`expansion`]) — add the n-hop
+//!    dependency closure of each partition's core vertices as
+//!    *support vertices/edges*, making each partition self-sufficient:
+//!    message passing for any core edge never leaves the partition.
+//!
+//! [`stats`] computes the paper's partition-quality metrics (core/total
+//! edges, replication factor RF of Eq. 7) that fill Tables 2 and 5.
+
+pub mod edge_cut;
+pub mod expansion;
+pub mod random;
+pub mod stats;
+pub mod vertex_cut;
+
+use crate::config::{PartitionConfig, PartitionStrategy};
+use crate::graph::{KnowledgeGraph, Triple};
+
+/// Which role a vertex plays inside one partition (paper §3.2.1-3.2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VertexRole {
+    /// Endpoint of a core edge, not replicated boundary.
+    Core,
+    /// Cut vertex replicated into several partitions.
+    Replicated,
+    /// Added by neighborhood expansion only (no core edge touches it).
+    Support,
+}
+
+/// One self-sufficient partition after expansion.
+///
+/// Vertices and edges are stored with *global* ids; `local_of`/`vertices`
+/// provide the dense local numbering used to build compute graphs.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub id: usize,
+    /// Global ids of every vertex present (core ∪ replicated ∪ support),
+    /// sorted ascending; index in this vec == local id.
+    pub vertices: Vec<u32>,
+    /// Role of each vertex, parallel to `vertices`.
+    pub roles: Vec<VertexRole>,
+    /// Core (training-positive) edges — a disjoint cover across partitions.
+    pub core_edges: Vec<Triple>,
+    /// Support edges added by expansion (message passing only, never
+    /// scored as positives).
+    pub support_edges: Vec<Triple>,
+}
+
+impl Partition {
+    /// Total edges = core + support (the paper's "total edges" column).
+    pub fn total_edges(&self) -> usize {
+        self.core_edges.len() + self.support_edges.len()
+    }
+
+    /// Local id of a global vertex (None if absent).
+    pub fn local_of(&self, global: u32) -> Option<u32> {
+        self.vertices.binary_search(&global).ok().map(|i| i as u32)
+    }
+
+    /// Global ids of core vertices (endpoints of core edges) — the
+    /// constraint-based negative sampler draws from exactly this set.
+    pub fn core_vertex_ids(&self) -> Vec<u32> {
+        self.vertices
+            .iter()
+            .zip(&self.roles)
+            .filter(|(_, role)| !matches!(role, VertexRole::Support))
+            .map(|(v, _)| *v)
+            .collect()
+    }
+}
+
+/// An edge-disjoint pre-expansion assignment: `assignment[i]` = partition
+/// of train edge `i`.
+#[derive(Clone, Debug)]
+pub struct EdgeAssignment {
+    pub num_partitions: usize,
+    pub assignment: Vec<u32>,
+}
+
+/// Run the configured strategy, returning the pre-expansion assignment.
+pub fn assign_edges(g: &KnowledgeGraph, cfg: &PartitionConfig, seed: u64) -> EdgeAssignment {
+    match cfg.strategy {
+        PartitionStrategy::Hdrf => {
+            vertex_cut::hdrf(g, cfg.num_partitions, cfg.hdrf_lambda, seed)
+        }
+        PartitionStrategy::Dbh => vertex_cut::dbh(g, cfg.num_partitions),
+        PartitionStrategy::MetisLike => edge_cut::metis_like(g, cfg.num_partitions, seed),
+        PartitionStrategy::Random => random::random(g, cfg.num_partitions, seed),
+    }
+}
+
+/// Full two-phase pipeline: assignment + neighborhood expansion.
+pub fn partition_graph(g: &KnowledgeGraph, cfg: &PartitionConfig, seed: u64) -> Vec<Partition> {
+    let assignment = assign_edges(g, cfg, seed);
+    expansion::expand(g, &assignment, cfg.hops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::graph::generator;
+
+    #[test]
+    fn every_strategy_produces_disjoint_cover() {
+        let g = generator::generate(&ExperimentConfig::tiny().dataset);
+        for strategy in [
+            PartitionStrategy::Hdrf,
+            PartitionStrategy::Dbh,
+            PartitionStrategy::MetisLike,
+            PartitionStrategy::Random,
+        ] {
+            let cfg = PartitionConfig { strategy, num_partitions: 4, hops: 2, hdrf_lambda: 1.0 };
+            let parts = partition_graph(&g, &cfg, 42);
+            assert_eq!(parts.len(), 4, "{strategy:?}");
+            let total_core: usize = parts.iter().map(|p| p.core_edges.len()).sum();
+            assert_eq!(total_core, g.train.len(), "{strategy:?}: core edges must cover train set");
+            // Disjoint: no triple in two partitions' core sets.
+            let mut seen = std::collections::HashSet::new();
+            for p in &parts {
+                for e in &p.core_edges {
+                    assert!(seen.insert(e.key()), "{strategy:?}: duplicated core edge {e:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_partition_is_whole_graph() {
+        let g = generator::generate(&ExperimentConfig::tiny().dataset);
+        let cfg = PartitionConfig {
+            strategy: PartitionStrategy::Hdrf,
+            num_partitions: 1,
+            hops: 2,
+            hdrf_lambda: 1.0,
+        };
+        let parts = partition_graph(&g, &cfg, 1);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].core_edges.len(), g.train.len());
+        assert!(parts[0].support_edges.is_empty(), "nothing to expand with P=1");
+    }
+
+    #[test]
+    fn local_of_roundtrips() {
+        let g = generator::generate(&ExperimentConfig::tiny().dataset);
+        let cfg = PartitionConfig {
+            strategy: PartitionStrategy::Hdrf,
+            num_partitions: 2,
+            hops: 2,
+            hdrf_lambda: 1.0,
+        };
+        let parts = partition_graph(&g, &cfg, 1);
+        for p in &parts {
+            for (local, &global) in p.vertices.iter().enumerate() {
+                assert_eq!(p.local_of(global), Some(local as u32));
+            }
+            assert_eq!(p.local_of(u32::MAX), None);
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Uniform random edge partitioning — the paper's §4.5.5 baseline.
+//! "In Random partitioning, we randomly divide the edges into 4
+//! partitions and then subsequently applied neighborhood expansion."
+//! Sizes come out balanced, but the RF is maximal, so after expansion
+//! every partition is nearly the whole graph (the paper's Table 5
+//! Random+NE row: epoch time equal to non-distributed training).
+
+use super::EdgeAssignment;
+use crate::graph::KnowledgeGraph;
+use crate::util::rng::Rng;
+
+pub fn random(g: &KnowledgeGraph, num_partitions: usize, seed: u64) -> EdgeAssignment {
+    let mut rng = Rng::seeded(seed ^ 0xD1CE_BA5E);
+    let assignment =
+        g.train.iter().map(|_| rng.below(num_partitions) as u32).collect();
+    EdgeAssignment { num_partitions, assignment }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::graph::generator;
+
+    #[test]
+    fn random_is_roughly_balanced_and_deterministic() {
+        let g = generator::generate(&ExperimentConfig::tiny().dataset);
+        let a = random(&g, 4, 1);
+        let mut sizes = [0usize; 4];
+        for &p in &a.assignment {
+            sizes[p as usize] += 1;
+        }
+        let expect = g.train.len() / 4;
+        for &s in &sizes {
+            assert!(
+                (s as f64 - expect as f64).abs() < expect as f64 * 0.25,
+                "random sizes skewed: {sizes:?}"
+            );
+        }
+        assert_eq!(a.assignment, random(&g, 4, 1).assignment);
+        assert_ne!(a.assignment, random(&g, 4, 2).assignment);
+    }
+}

@@ -1,0 +1,200 @@
+//! Report emitters: markdown tables (matching the paper's table layout)
+//! and series (CSV + ASCII sparklines) for figures. Every experiment
+//! harness returns these, and the CLI/examples print and archive them
+//! under `results/`.
+
+use std::fmt::Write as _;
+
+/// A markdown table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch in {:?}", self.title);
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(line, " {c:<w$} |");
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// A named data series (one figure line).
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// A figure: multiple series over a shared axis.
+#[derive(Clone, Debug)]
+pub struct Figure {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Figure {
+        Figure {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, label: &str, points: Vec<(f64, f64)>) {
+        self.series.push(Series { label: label.to_string(), points });
+    }
+
+    /// CSV: `x,<label1>,<label2>,...` — series aligned by point index if
+    /// they share x values, else long form `label,x,y`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "# {} — x: {}, y: {}", self.title, self.x_label, self.y_label);
+        let _ = writeln!(out, "series,x,y");
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                let _ = writeln!(out, "{},{x},{y}", s.label);
+            }
+        }
+        out
+    }
+
+    /// Coarse ASCII rendering so figures are legible in a terminal log.
+    pub fn to_ascii(&self) -> String {
+        const W: usize = 60;
+        const H: usize = 12;
+        let all: Vec<(f64, f64)> =
+            self.series.iter().flat_map(|s| s.points.iter().copied()).collect();
+        if all.is_empty() {
+            return format!("### {} (no data)\n", self.title);
+        }
+        let (mut x0, mut x1) = (f64::MAX, f64::MIN);
+        let (mut y0, mut y1) = (f64::MAX, f64::MIN);
+        for &(x, y) in &all {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        if (x1 - x0).abs() < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![b' '; W]; H];
+        let marks = [b'*', b'o', b'+', b'x', b'#', b'@'];
+        for (si, s) in self.series.iter().enumerate() {
+            for &(x, y) in &s.points {
+                let cx = ((x - x0) / (x1 - x0) * (W - 1) as f64).round() as usize;
+                let cy = ((y - y0) / (y1 - y0) * (H - 1) as f64).round() as usize;
+                grid[H - 1 - cy][cx] = marks[si % marks.len()];
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}  [y: {} in {y0:.3}..{y1:.3}]", self.title, self.y_label);
+        for row in grid {
+            let _ = writeln!(out, "  |{}|", String::from_utf8_lossy(&row));
+        }
+        let _ = writeln!(out, "   x: {} in {x0:.3}..{x1:.3}", self.x_label);
+        for (si, s) in self.series.iter().enumerate() {
+            let _ = writeln!(out, "   {} = {}", marks[si % marks.len()] as char, s.label);
+        }
+        out
+    }
+}
+
+/// Write a report file under `results/`, creating the directory.
+pub fn save_report(name: &str, content: &str) -> anyhow::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = Table::new("Table X", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Table X"));
+        assert!(md.lines().filter(|l| l.starts_with('|')).count() == 4);
+        // column alignment: all pipe rows same length
+        let lens: Vec<usize> =
+            md.lines().filter(|l| l.starts_with('|')).map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn figure_csv_and_ascii() {
+        let mut f = Figure::new("Fig", "epoch", "mrr");
+        f.add("p1", vec![(0.0, 0.1), (1.0, 0.2)]);
+        f.add("p4", vec![(0.0, 0.15), (1.0, 0.3)]);
+        let csv = f.to_csv();
+        assert!(csv.contains("p1,0,0.1"));
+        assert!(csv.contains("p4,1,0.3"));
+        let ascii = f.to_ascii();
+        assert!(ascii.contains("Fig"));
+        assert!(ascii.contains('*') && ascii.contains('o'));
+    }
+
+    #[test]
+    fn empty_figure_does_not_panic() {
+        let f = Figure::new("E", "x", "y");
+        assert!(f.to_ascii().contains("no data"));
+    }
+}

@@ -1,0 +1,156 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client). One [`Runtime`] owns
+//! the client and an executable cache keyed by artifact file name, so
+//! each HLO module is parsed + compiled exactly once per process. The
+//! xla wrapper types are not `Send`, so the whole runtime lives on the
+//! coordinator thread — the distributed cluster is *simulated* with a
+//! virtual clock (see `train::netsim`), which is the documented
+//! substitution for the paper's 4-node GPU cluster.
+
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Host-side tensor description for building input literals.
+pub enum HostTensor<'a> {
+    F32(&'a [f32], &'a [i64]),
+    I32(&'a [i32], &'a [i64]),
+    ScalarI32(i32),
+}
+
+/// A compiled entry point.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host inputs; returns the flattened tuple outputs.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so the raw
+    /// output is a single tuple literal which we decompose.
+    pub fn run(&self, inputs: &[HostTensor<'_>]) -> Result<Vec<xla::Literal>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(build_literal).collect::<Result<_>>()?;
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let result = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+fn build_literal(t: &HostTensor<'_>) -> Result<xla::Literal> {
+    Ok(match t {
+        HostTensor::F32(data, dims) => {
+            let lit = xla::Literal::vec1(data);
+            if dims.len() == 1 {
+                debug_assert_eq!(dims[0] as usize, data.len());
+                lit
+            } else {
+                lit.reshape(dims)?
+            }
+        }
+        HostTensor::I32(data, dims) => {
+            let lit = xla::Literal::vec1(data);
+            if dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(dims)?
+            }
+        }
+        HostTensor::ScalarI32(v) => xla::Literal::scalar(*v),
+    })
+}
+
+/// Read a f32 output literal into a Vec.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read a scalar f32 output.
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// The process-wide PJRT runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifact directory
+    /// (`artifacts/<model_key>/`).
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        anyhow::ensure!(
+            artifacts_dir.is_dir(),
+            "artifact directory {artifacts_dir:?} does not exist — run `make artifacts`"
+        );
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir: artifacts_dir.to_path_buf(), cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by file name (cached).
+    pub fn load(&self, file: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(file);
+        let sw = crate::util::timer::Stopwatch::new();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {file}"))?;
+        crate::log_info!("compiled {file} in {:.2}s", sw.elapsed_secs());
+        let e = Rc::new(Executable { name: file.to_string(), exe });
+        self.cache.borrow_mut().insert(file.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need real artifacts live in rust/tests/ (they
+    // require `make artifacts` to have run). Here: literal glue only.
+    use super::*;
+
+    #[test]
+    fn f32_literal_roundtrip() {
+        let data = [1.0f32, 2.0, 3.0, 4.0];
+        let lit = build_literal(&HostTensor::F32(&data, &[4])).unwrap();
+        assert_eq!(literal_to_f32(&lit).unwrap(), data.to_vec());
+        let lit2 = build_literal(&HostTensor::F32(&data, &[2, 2])).unwrap();
+        assert_eq!(lit2.element_count(), 4);
+    }
+
+    #[test]
+    fn i32_and_scalar_literals() {
+        let data = [5i32, -1, 7];
+        let lit = build_literal(&HostTensor::I32(&data, &[3])).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data.to_vec());
+        let s = build_literal(&HostTensor::ScalarI32(42)).unwrap();
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 42);
+    }
+}

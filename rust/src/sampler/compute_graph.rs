@@ -1,0 +1,402 @@
+//! Compute-graph extraction — the paper's `getComputeGraph` (§3.3.2/3.3.3
+//! and the dominant per-batch cost in Figure 6b).
+//!
+//! Given an edge mini-batch, extract the n-hop message-passing closure:
+//! every vertex whose hidden state feeds a batch endpoint's embedding and
+//! every directed message edge between them. The result uses a dense
+//! *cg-local* id space so the HLO executable can gather/scatter with
+//! small indices.
+//!
+//! Message-edge rule (mirrors `partition::expansion` and the L2 model,
+//! which processes directed messages with inverse relations): for a
+//! stored edge (u, r, v), the forward message u→v (relation r) is needed
+//! iff dist(v) ≤ n-1, and the inverse message v→u (relation r+R) iff
+//! dist(u) ≤ n-1.
+//!
+//! The builder is arena-style: all visit state is stamped (O(1) logical
+//! reset), so per-batch extraction allocates only the output vectors.
+
+use super::{PartContext, TrainTriple};
+
+
+/// A batch's message-passing closure in dense cg-local ids.
+#[derive(Clone, Debug, Default)]
+pub struct ComputeGraph {
+    /// cg-local -> global vertex id (embedding/feature gather key).
+    pub nodes_global: Vec<u32>,
+    /// cg-local -> partition-local vertex id.
+    pub nodes_part: Vec<u32>,
+    /// Directed message edges in cg-local ids; `rel` already includes the
+    /// inverse-relation offset (+R) for reversed messages.
+    pub src: Vec<i32>,
+    pub dst: Vec<i32>,
+    pub rel: Vec<i32>,
+    /// Batch triples in cg-local ids, with labels.
+    pub ts: Vec<i32>,
+    pub tr: Vec<i32>,
+    pub tt: Vec<i32>,
+    pub labels: Vec<f32>,
+}
+
+impl ComputeGraph {
+    pub fn num_nodes(&self) -> usize {
+        self.nodes_global.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.src.len()
+    }
+
+    pub fn num_triples(&self) -> usize {
+        self.ts.len()
+    }
+}
+
+/// Reusable extractor over one partition.
+pub struct ComputeGraphBuilder {
+    stamp: u32,
+    /// Visit stamps + assigned cg-local id per partition-local vertex.
+    node_stamp: Vec<u32>,
+    node_cg: Vec<u32>,
+    node_dist: Vec<u32>,
+    /// Emission stamps per partition edge and direction (fwd=bit0 via
+    /// stamp equality in `edge_fwd`, inv in `edge_inv`).
+    edge_fwd: Vec<u32>,
+    edge_inv: Vec<u32>,
+    /// BFS queue of partition-local vertex ids (reused).
+    queue: Vec<u32>,
+}
+
+impl ComputeGraphBuilder {
+    pub fn new(ctx: &PartContext) -> Self {
+        ComputeGraphBuilder {
+            stamp: 0,
+            node_stamp: vec![0; ctx.num_local_vertices()],
+            node_cg: vec![0; ctx.num_local_vertices()],
+            node_dist: vec![0; ctx.num_local_vertices()],
+            edge_fwd: vec![0; ctx.edges.len()],
+            edge_inv: vec![0; ctx.edges.len()],
+            queue: Vec::new(),
+        }
+    }
+
+    /// Extract the `hops`-hop closure of `batch`. `num_relations` is the
+    /// graph's base relation count R (inverse messages use r + R).
+    pub fn build(
+        &mut self,
+        ctx: &PartContext,
+        batch: &[TrainTriple],
+        hops: usize,
+        num_relations: usize,
+    ) -> ComputeGraph {
+        self.stamp += 1;
+        let stamp = self.stamp;
+        let mut cg = ComputeGraph::default();
+        self.queue.clear();
+
+        // Seed with batch endpoints (distance 0).
+        let visit = |v: u32,
+                         cg: &mut ComputeGraph,
+                         queue: &mut Vec<u32>,
+                         node_stamp: &mut [u32],
+                         node_cg: &mut [u32],
+                         node_dist: &mut [u32],
+                         dist: u32|
+         -> u32 {
+            if node_stamp[v as usize] == stamp {
+                return node_cg[v as usize];
+            }
+            node_stamp[v as usize] = stamp;
+            node_dist[v as usize] = dist;
+            let id = cg.nodes_part.len() as u32;
+            node_cg[v as usize] = id;
+            cg.nodes_part.push(v);
+            cg.nodes_global.push(ctx.global_nodes[v as usize]);
+            queue.push(v);
+            id
+        };
+
+        for t in batch {
+            let s_id = visit(
+                t.s,
+                &mut cg,
+                &mut self.queue,
+                &mut self.node_stamp,
+                &mut self.node_cg,
+                &mut self.node_dist,
+                0,
+            );
+            let t_id = visit(
+                t.t,
+                &mut cg,
+                &mut self.queue,
+                &mut self.node_stamp,
+                &mut self.node_cg,
+                &mut self.node_dist,
+                0,
+            );
+            cg.ts.push(s_id as i32);
+            cg.tr.push(t.r as i32);
+            cg.tt.push(t_id as i32);
+            cg.labels.push(t.label);
+        }
+
+        // BFS: vertices at dist d <= hops-1 receive messages, so all
+        // their incident edges emit a message toward them, and their
+        // neighbors join at dist d+1.
+        let mut head = 0usize;
+        while head < self.queue.len() {
+            let v = self.queue[head];
+            head += 1;
+            let d = self.node_dist[v as usize];
+            if d as usize >= hops {
+                continue;
+            }
+            let v_cg = self.node_cg[v as usize] as i32;
+            // Incoming stored edges (u -> v): forward message u -> v.
+            for &eid in ctx.csr.in_edges(v) {
+                if self.edge_fwd[eid as usize] != stamp {
+                    self.edge_fwd[eid as usize] = stamp;
+                    let e = ctx.edges[eid as usize];
+                    let u_cg = visit(
+                        e.s,
+                        &mut cg,
+                        &mut self.queue,
+                        &mut self.node_stamp,
+                        &mut self.node_cg,
+                        &mut self.node_dist,
+                        d + 1,
+                    );
+                    cg.src.push(u_cg as i32);
+                    cg.dst.push(v_cg);
+                    cg.rel.push(e.r as i32);
+                }
+            }
+            // Outgoing stored edges (v -> w): inverse message w -> v.
+            for &eid in ctx.csr.out_edges(v) {
+                if self.edge_inv[eid as usize] != stamp {
+                    self.edge_inv[eid as usize] = stamp;
+                    let e = ctx.edges[eid as usize];
+                    let w_cg = visit(
+                        e.t,
+                        &mut cg,
+                        &mut self.queue,
+                        &mut self.node_stamp,
+                        &mut self.node_cg,
+                        &mut self.node_dist,
+                        d + 1,
+                    );
+                    cg.src.push(w_cg as i32);
+                    cg.dst.push(v_cg);
+                    cg.rel.push((e.r + num_relations as u32) as i32);
+                }
+            }
+        }
+        cg
+    }
+}
+
+/// Figure 2 helper: average number of vertices required to compute one
+/// vertex embedding at `hops` hops, estimated over `sample` seed vertices
+/// of the full (single-partition) context.
+pub fn avg_closure_size(
+    ctx: &PartContext,
+    hops: usize,
+    sample: usize,
+    seed: u64,
+) -> f64 {
+    let mut builder = ComputeGraphBuilder::new(ctx);
+    let mut rng = crate::util::rng::Rng::seeded(seed);
+    let n = ctx.num_local_vertices();
+    let take = sample.min(n);
+    let mut total = 0usize;
+    for _ in 0..take {
+        let v = rng.below(n) as u32;
+        let probe = [TrainTriple { s: v, r: 0, t: v, label: 1.0 }];
+        let cg = builder.build(ctx, &probe, hops, 1);
+        total += cg.num_nodes();
+    }
+    total as f64 / take as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::tests::make_contexts;
+
+    fn full_ctx() -> (crate::graph::KnowledgeGraph, PartContext) {
+        let (g, mut ctxs) = make_contexts(1);
+        (g, ctxs.remove(0))
+    }
+
+    #[test]
+    fn closure_contains_all_batch_endpoints_first() {
+        let (_, ctx) = full_ctx();
+        let mut b = ComputeGraphBuilder::new(&ctx);
+        let batch: Vec<TrainTriple> = ctx.core_edges[..8]
+            .iter()
+            .map(|e| TrainTriple { s: e.s, r: e.r, t: e.t, label: 1.0 })
+            .collect();
+        let cg = b.build(&ctx, &batch, 2, 8);
+        assert_eq!(cg.num_triples(), 8);
+        for i in 0..8 {
+            // Triple endpoints must be valid cg ids mapping back to the
+            // batch's partition-local vertices.
+            let s_cg = cg.ts[i] as usize;
+            let t_cg = cg.tt[i] as usize;
+            assert_eq!(cg.nodes_part[s_cg], batch[i].s);
+            assert_eq!(cg.nodes_part[t_cg], batch[i].t);
+        }
+    }
+
+    #[test]
+    fn edges_are_within_cg_and_rel_offset_applied() {
+        let (g, ctx) = full_ctx();
+        let r = g.num_relations;
+        let mut b = ComputeGraphBuilder::new(&ctx);
+        let batch: Vec<TrainTriple> = ctx.core_edges[..4]
+            .iter()
+            .map(|e| TrainTriple { s: e.s, r: e.r, t: e.t, label: 1.0 })
+            .collect();
+        let cg = b.build(&ctx, &batch, 2, r);
+        let n = cg.num_nodes() as i32;
+        assert!(cg.num_edges() > 0);
+        let mut saw_fwd = false;
+        let mut saw_inv = false;
+        for i in 0..cg.num_edges() {
+            assert!(cg.src[i] < n && cg.dst[i] < n);
+            if (cg.rel[i] as usize) < r {
+                saw_fwd = true;
+            } else {
+                assert!((cg.rel[i] as usize) < 2 * r);
+                saw_inv = true;
+            }
+        }
+        assert!(saw_fwd && saw_inv, "both directions should appear");
+    }
+
+    /// Every dist<=hops-1 vertex has its complete in+out neighborhood as
+    /// messages — the correctness property message passing relies on.
+    #[test]
+    fn closure_is_message_complete() {
+        let (g, ctx) = full_ctx();
+        let r = g.num_relations;
+        let hops = 2;
+        let mut b = ComputeGraphBuilder::new(&ctx);
+        let batch: Vec<TrainTriple> = ctx.core_edges[..3]
+            .iter()
+            .map(|e| TrainTriple { s: e.s, r: e.r, t: e.t, label: 1.0 })
+            .collect();
+        let cg = b.build(&ctx, &batch, hops, r);
+        // Reconstruct dist via BFS over the partition from batch seeds.
+        let n = ctx.num_local_vertices();
+        let mut dist = vec![u32::MAX; n];
+        let mut q: Vec<u32> = Vec::new();
+        for t in &batch {
+            for v in [t.s, t.t] {
+                if dist[v as usize] == u32::MAX {
+                    dist[v as usize] = 0;
+                    q.push(v);
+                }
+            }
+        }
+        let mut head = 0;
+        while head < q.len() {
+            let v = q[head];
+            head += 1;
+            let d = dist[v as usize];
+            if d as usize >= hops {
+                continue;
+            }
+            for &eid in ctx.csr.in_edges(v).iter().chain(ctx.csr.out_edges(v)) {
+                let e = ctx.edges[eid as usize];
+                let w = if e.s == v { e.t } else { e.s };
+                if dist[w as usize] == u32::MAX {
+                    dist[w as usize] = d + 1;
+                    q.push(w);
+                }
+            }
+        }
+        // Gather messages per cg-dst.
+        use std::collections::HashSet;
+        let mut msgs: HashSet<(i32, i32, i32)> = HashSet::new();
+        for i in 0..cg.num_edges() {
+            msgs.insert((cg.src[i], cg.dst[i], cg.rel[i]));
+        }
+        let cg_of: std::collections::HashMap<u32, i32> = cg
+            .nodes_part
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i as i32))
+            .collect();
+        for v in 0..n as u32 {
+            if dist[v as usize] as usize >= hops {
+                continue;
+            }
+            if dist[v as usize] == u32::MAX {
+                continue;
+            }
+            let v_cg = cg_of[&v];
+            for &eid in ctx.csr.in_edges(v) {
+                let e = ctx.edges[eid as usize];
+                let u_cg = cg_of[&e.s];
+                assert!(
+                    msgs.contains(&(u_cg, v_cg, e.r as i32)),
+                    "missing forward message for dist-{} vertex",
+                    dist[v as usize]
+                );
+            }
+            for &eid in ctx.csr.out_edges(v) {
+                let e = ctx.edges[eid as usize];
+                let w_cg = cg_of[&e.t];
+                assert!(
+                    msgs.contains(&(w_cg, v_cg, (e.r as usize + r) as i32)),
+                    "missing inverse message"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn builder_is_reusable_and_deterministic() {
+        let (g, ctx) = full_ctx();
+        let mut b = ComputeGraphBuilder::new(&ctx);
+        let batch: Vec<TrainTriple> = ctx.core_edges[..5]
+            .iter()
+            .map(|e| TrainTriple { s: e.s, r: e.r, t: e.t, label: 1.0 })
+            .collect();
+        let a = b.build(&ctx, &batch, 2, g.num_relations);
+        let c = b.build(&ctx, &batch, 2, g.num_relations);
+        assert_eq!(a.nodes_part, c.nodes_part);
+        assert_eq!(a.src, c.src);
+        assert_eq!(a.rel, c.rel);
+    }
+
+    #[test]
+    fn hop_growth_is_monotone() {
+        let (g, ctx) = full_ctx();
+        let mut b = ComputeGraphBuilder::new(&ctx);
+        let batch = [TrainTriple {
+            s: ctx.core_edges[0].s,
+            r: 0,
+            t: ctx.core_edges[0].t,
+            label: 1.0,
+        }];
+        let mut prev = 0;
+        for hops in 1..=3 {
+            let cg = b.build(&ctx, &batch, hops, g.num_relations);
+            assert!(cg.num_nodes() >= prev);
+            prev = cg.num_nodes();
+        }
+    }
+
+    #[test]
+    fn avg_closure_size_grows_with_hops() {
+        let (_, ctx) = full_ctx();
+        let a1 = avg_closure_size(&ctx, 1, 50, 1);
+        let a2 = avg_closure_size(&ctx, 2, 50, 1);
+        let a3 = avg_closure_size(&ctx, 3, 50, 1);
+        assert!(a1 >= 1.0);
+        assert!(a2 >= a1 && a3 >= a2, "Figure-2 trend violated: {a1:.1} {a2:.1} {a3:.1}");
+    }
+}

@@ -1,0 +1,135 @@
+//! Training-data pipeline per partition (paper §3.3): constraint-based
+//! negative sampling, edge mini-batching, and compute-graph extraction.
+//!
+//! [`PartContext`] freezes one partition into local-id form (dense local
+//! vertex numbering, local CSR over all message edges). Per epoch, the
+//! [`negative`] sampler corrupts each core edge into `s` negatives drawn
+//! from the partition's core vertices (the paper's locally-closed-world
+//! constraint), [`batch`] shuffles and chunks positives+negatives into
+//! edge mini-batches, and [`compute_graph`] extracts the n-hop
+//! message-passing closure of each batch — the paper's
+//! `getComputeGraph`, its measured per-batch hot spot.
+
+pub mod batch;
+pub mod compute_graph;
+pub mod negative;
+
+use crate::graph::{Csr, Triple};
+use crate::partition::Partition;
+
+/// A training example in partition-local vertex ids.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrainTriple {
+    pub s: u32,
+    pub r: u32,
+    pub t: u32,
+    /// 1.0 positive, 0.0 negative (Eq. 3's y).
+    pub label: f32,
+}
+
+/// A partition frozen into local-id form for training.
+#[derive(Clone, Debug)]
+pub struct PartContext {
+    pub part_id: usize,
+    /// Global vertex id of each local id (sorted — same order as
+    /// `Partition::vertices`).
+    pub global_nodes: Vec<u32>,
+    /// All message-passing edges (core + support) in local ids.
+    pub edges: Vec<Triple>,
+    /// CSR over `edges` (local vertex space).
+    pub csr: Csr,
+    /// Core (positive) edges in local ids.
+    pub core_edges: Vec<Triple>,
+    /// Local ids of core vertices — the constraint-based negative
+    /// sampler's domain (paper §3.3.1).
+    pub core_vertices: Vec<u32>,
+}
+
+impl PartContext {
+    pub fn new(part: &Partition) -> Self {
+        let global_nodes = part.vertices.clone();
+        let to_local = |g: u32| -> u32 {
+            part.local_of(g).expect("partition edge endpoint missing from vertex set")
+        };
+        let localize = |e: &Triple| Triple::new(to_local(e.s), e.r, to_local(e.t));
+        let core_edges: Vec<Triple> = part.core_edges.iter().map(localize).collect();
+        let mut edges: Vec<Triple> = core_edges.clone();
+        edges.extend(part.support_edges.iter().map(localize));
+        let csr = Csr::build(global_nodes.len(), &edges);
+        let core_vertices: Vec<u32> = part
+            .vertices
+            .iter()
+            .zip(&part.roles)
+            .enumerate()
+            .filter(|(_, (_, role))| !matches!(role, crate::partition::VertexRole::Support))
+            .map(|(local, _)| local as u32)
+            .collect();
+        PartContext { part_id: part.id, global_nodes, edges, csr, core_edges, core_vertices }
+    }
+
+    pub fn num_local_vertices(&self) -> usize {
+        self.global_nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, PartitionConfig, PartitionStrategy};
+    use crate::graph::generator;
+    use crate::partition;
+
+    pub(crate) fn make_contexts(p: usize) -> (crate::graph::KnowledgeGraph, Vec<PartContext>) {
+        let g = generator::generate(&ExperimentConfig::tiny().dataset);
+        let cfg = PartitionConfig {
+            strategy: PartitionStrategy::Hdrf,
+            num_partitions: p,
+            hops: 2,
+            hdrf_lambda: 1.0,
+        };
+        let parts = partition::partition_graph(&g, &cfg, 5);
+        let ctxs = parts.iter().map(PartContext::new).collect();
+        (g, ctxs)
+    }
+
+    #[test]
+    fn localization_roundtrips_to_global() {
+        let (g, ctxs) = make_contexts(3);
+        let mut seen_core = 0usize;
+        for ctx in &ctxs {
+            for e in &ctx.core_edges {
+                let gs = ctx.global_nodes[e.s as usize];
+                let gt = ctx.global_nodes[e.t as usize];
+                assert!(
+                    g.train.contains(&Triple::new(gs, e.r, gt)),
+                    "core edge does not map back to a train triple"
+                );
+                seen_core += 1;
+            }
+        }
+        assert_eq!(seen_core, g.train.len());
+    }
+
+    #[test]
+    fn edge_ids_are_local_and_in_range() {
+        let (_, ctxs) = make_contexts(3);
+        for ctx in &ctxs {
+            let n = ctx.num_local_vertices() as u32;
+            for e in &ctx.edges {
+                assert!(e.s < n && e.t < n);
+            }
+            assert!(ctx.core_vertices.iter().all(|&v| v < n));
+            assert!(!ctx.core_vertices.is_empty());
+        }
+    }
+
+    #[test]
+    fn csr_covers_all_partition_edges() {
+        let (_, ctxs) = make_contexts(2);
+        for ctx in &ctxs {
+            let total: usize =
+                (0..ctx.num_local_vertices() as u32).map(|v| ctx.csr.out_degree(v)).sum();
+            assert_eq!(total, ctx.edges.len());
+        }
+    }
+}

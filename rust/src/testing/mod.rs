@@ -1,0 +1,98 @@
+//! Mini property-testing harness (`proptest` is unavailable offline).
+//!
+//! [`prop_check`] runs a property over `cases` seeded random inputs; on
+//! failure it reports the failing seed so the case can be replayed
+//! exactly (`KGSCALE_PROP_SEED=<seed>` reruns only that seed). No
+//! shrinking — generators here are parameterized small enough that raw
+//! failing cases are readable.
+
+use crate::util::rng::Rng;
+
+/// Run `property(rng)` for `cases` independent seeds derived from `base`.
+/// Panics with the failing seed on the first violation.
+pub fn prop_check(name: &str, base: u64, cases: usize, mut property: impl FnMut(&mut Rng)) {
+    if let Ok(seed) = std::env::var("KGSCALE_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("KGSCALE_PROP_SEED must be a u64");
+        let mut rng = Rng::seeded(seed);
+        property(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        let seed = base
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::seeded(seed);
+            property(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property {name:?} failed on case {case} — replay with KGSCALE_PROP_SEED={seed}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generators for property tests.
+pub mod gen {
+    use crate::config::DatasetConfig;
+    use crate::graph::{generator, KnowledgeGraph};
+    use crate::util::rng::Rng;
+
+    /// A random small KG: 50-400 entities, 2-12 relations, density 2-8.
+    pub fn small_kg(rng: &mut Rng) -> KnowledgeGraph {
+        let entities = 50 + rng.below(350);
+        let relations = 2 + rng.below(10);
+        let avg_deg = 2 + rng.below(6);
+        let train_edges = entities * avg_deg;
+        let cfg = DatasetConfig {
+            name: "prop".into(),
+            kind: crate::config::DatasetKind::ZipfKg,
+            entities,
+            relations,
+            train_edges,
+            valid_edges: (train_edges / 20).max(1),
+            test_edges: (train_edges / 20).max(1),
+            feature_dim: 0,
+            zipf_exponent: 1.0 + rng.next_f64() * 0.5,
+            seed: rng.next_u64(),
+        };
+        generator::generate(&cfg)
+    }
+
+    /// Random partition count in 1..=8.
+    pub fn partitions(rng: &mut Rng) -> usize {
+        1 + rng.below(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_passes_quiet() {
+        prop_check("trivial", 1, 5, |rng| {
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn prop_check_reports_failure() {
+        prop_check("failing", 2, 10, |rng| {
+            assert!(rng.below(10) < 9, "intentional");
+        });
+    }
+
+    #[test]
+    fn generators_produce_valid_graphs() {
+        prop_check("gen-valid", 3, 3, |rng| {
+            let g = gen::small_kg(rng);
+            g.check().unwrap();
+            assert!(g.num_entities >= 50);
+        });
+    }
+}

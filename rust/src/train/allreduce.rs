@@ -1,0 +1,202 @@
+//! Ring AllReduce — a faithful in-process implementation of the chunked
+//! reduce-scatter + all-gather algorithm (the operation Gloo performs for
+//! PyTorch DDP, paper §2.2/§3.1).
+//!
+//! The virtual-clock trainer does not need to *move* bytes (all replicas
+//! live in one address space and weighted averaging is associative), but
+//! this module exists for three reasons:
+//!
+//! 1. it is the correctness oracle — tests prove the chunked ring
+//!    produces bit-identical results to a serial sum, the mathematical
+//!    equivalence the paper's §2.2 requires;
+//! 2. the `allreduce` bench measures its real memory-bandwidth cost and
+//!    compares ring vs parameter-server aggregation shapes;
+//! 3. ablations can run the trainer through it to include real (not
+//!    modeled) reduction cost.
+
+/// In-place ring AllReduce over `p` worker gradient buffers: afterwards
+/// every buffer holds the element-wise SUM of all inputs.
+///
+/// Implements the textbook schedule: buffers are cut into `p` chunks;
+/// during reduce-scatter step s, worker w adds its chunk
+/// `(w - s - 1) mod p` into worker `(w + 1) mod p`'s copy; after p-1
+/// steps worker w owns the full sum of chunk `(w + 1) mod p`; all-gather
+/// then rotates the finished chunks around the ring.
+pub fn ring_allreduce_sum(buffers: &mut [Vec<f32>]) {
+    let p = buffers.len();
+    if p <= 1 {
+        return;
+    }
+    let n = buffers[0].len();
+    assert!(buffers.iter().all(|b| b.len() == n), "mismatched gradient sizes");
+    if n == 0 {
+        return;
+    }
+    let chunk_bounds = |c: usize| -> (usize, usize) {
+        let lo = c * n / p;
+        let hi = (c + 1) * n / p;
+        (lo, hi)
+    };
+
+    // Reduce-scatter: p-1 rounds. In round s, worker w sends chunk
+    // (w - s) mod p to worker (w + 1) mod p, which accumulates it.
+    for s in 0..p - 1 {
+        for w in 0..p {
+            let src_worker = w;
+            let dst_worker = (w + 1) % p;
+            let c = (w + p - s) % p;
+            let (lo, hi) = chunk_bounds(c);
+            // Split-borrow the two workers' buffers.
+            let (a, b) = if src_worker < dst_worker {
+                let (left, right) = buffers.split_at_mut(dst_worker);
+                (&left[src_worker][lo..hi], &mut right[0][lo..hi])
+            } else {
+                let (left, right) = buffers.split_at_mut(src_worker);
+                let dst = &mut left[dst_worker];
+                (&right[0][lo..hi], &mut dst[lo..hi])
+            };
+            for (d, s_) in b.iter_mut().zip(a.iter()) {
+                *d += s_;
+            }
+        }
+    }
+
+    // After reduce-scatter, worker w holds the complete sum of chunk
+    // (w + 1) mod p. All-gather: rotate complete chunks around the ring.
+    for s in 0..p - 1 {
+        for w in 0..p {
+            let src_worker = w;
+            let dst_worker = (w + 1) % p;
+            let c = (w + 1 + p - s) % p;
+            let (lo, hi) = chunk_bounds(c);
+            let (a, b) = if src_worker < dst_worker {
+                let (left, right) = buffers.split_at_mut(dst_worker);
+                (&left[src_worker][lo..hi], &mut right[0][lo..hi])
+            } else {
+                let (left, right) = buffers.split_at_mut(src_worker);
+                let dst = &mut left[dst_worker];
+                (&right[0][lo..hi], &mut dst[lo..hi])
+            };
+            b.copy_from_slice(a);
+        }
+    }
+}
+
+/// AllReduce to the MEAN (the DDP semantic): sum then scale by 1/p.
+pub fn ring_allreduce_mean(buffers: &mut [Vec<f32>]) {
+    let p = buffers.len() as f32;
+    ring_allreduce_sum(buffers);
+    for b in buffers.iter_mut() {
+        for v in b.iter_mut() {
+            *v /= p;
+        }
+    }
+}
+
+/// Parameter-server aggregation baseline: worker 0 acts as the server.
+/// Same result, different (serialized) data movement — benched against
+/// the ring in `benches/allreduce.rs`.
+pub fn param_server_sum(buffers: &mut [Vec<f32>]) {
+    let p = buffers.len();
+    if p <= 1 {
+        return;
+    }
+    let (server, rest) = buffers.split_at_mut(1);
+    for b in rest.iter() {
+        for (d, s) in server[0].iter_mut().zip(b.iter()) {
+            *d += s;
+        }
+    }
+    for b in rest.iter_mut() {
+        b.copy_from_slice(&server[0]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_buffers(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seeded(seed);
+        (0..p)
+            .map(|_| (0..n).map(|_| rng.uniform_f32(-1.0, 1.0)).collect())
+            .collect()
+    }
+
+    fn serial_sum(buffers: &[Vec<f32>]) -> Vec<f32> {
+        let n = buffers[0].len();
+        let mut out = vec![0f32; n];
+        for b in buffers {
+            for (o, x) in out.iter_mut().zip(b.iter()) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn ring_equals_serial_sum_various_p_and_n() {
+        for (p, n) in [(2, 10), (3, 7), (4, 64), (5, 1), (8, 1000), (7, 13)] {
+            let mut bufs = random_buffers(p, n, p as u64 * 31 + n as u64);
+            let want = serial_sum(&bufs);
+            ring_allreduce_sum(&mut bufs);
+            for (w, b) in bufs.iter().enumerate() {
+                for (i, (&got, &wv)) in b.iter().zip(&want).enumerate() {
+                    assert!(
+                        (got - wv).abs() <= 1e-4 * wv.abs().max(1.0),
+                        "p={p} n={n} worker {w} elem {i}: {got} != {wv}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_replicas_identical_after_ring() {
+        let mut bufs = random_buffers(6, 101, 9);
+        ring_allreduce_sum(&mut bufs);
+        for w in 1..bufs.len() {
+            assert_eq!(bufs[0], bufs[w], "replica {w} diverged");
+        }
+    }
+
+    #[test]
+    fn mean_scales_sum() {
+        let mut bufs = vec![vec![2.0f32; 8], vec![4.0f32; 8]];
+        ring_allreduce_mean(&mut bufs);
+        assert!(bufs[0].iter().all(|&x| (x - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn param_server_matches_ring() {
+        let mut a = random_buffers(5, 37, 3);
+        let mut b = a.clone();
+        ring_allreduce_sum(&mut a);
+        param_server_sum(&mut b);
+        for (x, y) in a[0].iter().zip(&b[0]) {
+            assert!((x - y).abs() <= 1e-4 * x.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn single_worker_and_empty_are_noops() {
+        let mut one = vec![vec![1.0f32, 2.0]];
+        ring_allreduce_sum(&mut one);
+        assert_eq!(one[0], vec![1.0, 2.0]);
+        let mut empty: Vec<Vec<f32>> = vec![vec![], vec![]];
+        ring_allreduce_sum(&mut empty);
+    }
+
+    #[test]
+    fn n_smaller_than_p_still_correct() {
+        let mut bufs = random_buffers(8, 3, 5);
+        let want = serial_sum(&bufs);
+        ring_allreduce_sum(&mut bufs);
+        for b in &bufs {
+            for (got, wv) in b.iter().zip(&want) {
+                assert!((got - wv).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Checkpointing: flat parameters + Adam state to a small binary format.
+//!
+//! Layout (little-endian):
+//!   magic "KGSC" | version u32 | param_count u64 | adam_t u64
+//!   | params f32[n] | adam_m f32[n] | adam_v f32[n]
+
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"KGSC";
+const VERSION: u32 = 1;
+
+pub struct Checkpoint {
+    pub params: Vec<f32>,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    pub adam_t: u64,
+}
+
+pub fn save(path: &Path, params: &[f32], adam_m: &[f32], adam_v: &[f32], adam_t: u64) -> Result<()> {
+    anyhow::ensure!(params.len() == adam_m.len() && params.len() == adam_v.len());
+    let file = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(params.len() as u64).to_le_bytes())?;
+    w.write_all(&adam_t.to_le_bytes())?;
+    for arr in [params, adam_m, adam_v] {
+        for &x in arr {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut r = std::io::BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a kgscale checkpoint");
+    let mut u32b = [0u8; 4];
+    r.read_exact(&mut u32b)?;
+    anyhow::ensure!(u32::from_le_bytes(u32b) == VERSION, "unsupported checkpoint version");
+    let mut u64b = [0u8; 8];
+    r.read_exact(&mut u64b)?;
+    let n = u64::from_le_bytes(u64b) as usize;
+    r.read_exact(&mut u64b)?;
+    let adam_t = u64::from_le_bytes(u64b);
+    let mut read_vec = |n: usize| -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; n * 4];
+        r.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    };
+    let params = read_vec(n)?;
+    let adam_m = read_vec(n)?;
+    let adam_v = read_vec(n)?;
+    Ok(Checkpoint { params, adam_m, adam_v, adam_t })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("kgscale-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.ckpt");
+        let params = vec![1.0f32, -2.5, 3.25];
+        let m = vec![0.1f32, 0.2, 0.3];
+        let v = vec![0.01f32, 0.02, 0.03];
+        save(&path, &params, &m, &v, 42).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.params, params);
+        assert_eq!(ck.adam_m, m);
+        assert_eq!(ck.adam_v, v);
+        assert_eq!(ck.adam_t, 42);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("kgscale-ckpt-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

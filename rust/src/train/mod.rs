@@ -1,0 +1,19 @@
+//! Distributed training (paper §3): synchronous data-parallel workers on
+//! self-sufficient partitions, ring-AllReduce gradient sharing, Adam.
+//!
+//! Cluster simulation: compute is measured, communication is modeled
+//! ([`netsim`]) — see DESIGN.md "Substitutions". [`allreduce`] carries a
+//! faithful chunked ring implementation used as the correctness oracle
+//! and for bandwidth benches; [`plan`] sizes the AOT buckets; and
+//! [`trainer`] is Algorithm 1.
+
+pub mod allreduce;
+pub mod checkpoint;
+pub mod netsim;
+pub mod optimizer;
+pub mod plan;
+pub mod trainer;
+
+pub use netsim::{NetworkModel, VirtualClock};
+pub use optimizer::Adam;
+pub use trainer::Trainer;

@@ -1,0 +1,199 @@
+//! α-β interconnect model for the simulated cluster.
+//!
+//! The paper trains on 4 machines × 2 GPUs over 40 Gb Ethernet with Gloo.
+//! We reproduce the *timing structure* of that cluster on one core: each
+//! worker's compute time is measured for real, and communication costs
+//! come from this model (DESIGN.md "Substitutions").
+//!
+//! Transfer cost of M bytes over one hop: `α + M/β` with α the message
+//! latency and β the link bandwidth. Ring AllReduce on P trainers does
+//! 2(P−1) steps each moving M/P bytes per link (reduce-scatter +
+//! all-gather), so `T_ring = 2(P−1)(α + M/(Pβ))` — the standard
+//! bandwidth-optimal bound the paper's §2.2 argument relies on. The
+//! parameter-server alternative funnels everything through one endpoint:
+//! `T_ps = 2(P−1)·M/β + 2α`, worse by ~P for large M — this asymmetry is
+//! exactly why the paper picks AllReduce, and the `allreduce` bench
+//! regenerates it.
+//!
+//! Topology wrinkle (paper §4.4 runs 2 trainers per machine): hops
+//! between co-located trainers use `local_bandwidth` (PCIe/NVLink-class).
+//! The ring's slowest hop dominates, so the effective β is the cross-node
+//! link whenever P > trainers_per_node.
+
+use crate::config::NetworkConfig;
+
+/// Seconds to move `bytes` over one hop of kind `local`.
+fn hop_secs(latency_s: f64, bytes: f64, bw_bytes_s: f64) -> f64 {
+    latency_s + bytes / bw_bytes_s
+}
+
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    latency_s: f64,
+    cross_bw: f64,
+    local_bw: f64,
+    trainers_per_node: usize,
+}
+
+impl NetworkModel {
+    pub fn new(cfg: &NetworkConfig) -> Self {
+        NetworkModel {
+            latency_s: cfg.latency_us * 1e-6,
+            cross_bw: cfg.bandwidth_gbps * 1e9 / 8.0,
+            local_bw: cfg.local_bandwidth_gbps * 1e9 / 8.0,
+            trainers_per_node: cfg.trainers_per_node.max(1),
+        }
+    }
+
+    /// Zero-cost model (used by tests and single-trainer runs).
+    pub fn zero() -> Self {
+        NetworkModel { latency_s: 0.0, cross_bw: f64::INFINITY, local_bw: f64::INFINITY, trainers_per_node: 1 }
+    }
+
+    /// Ring AllReduce of `bytes` across `p` trainers.
+    pub fn ring_allreduce_secs(&self, bytes: usize, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        // The ring is synchronous: every step waits for its slowest hop.
+        let slowest_bw =
+            if p > self.trainers_per_node { self.cross_bw } else { self.local_bw };
+        let chunk = bytes as f64 / p as f64;
+        2.0 * (p - 1) as f64 * hop_secs(self.latency_s, chunk, slowest_bw)
+    }
+
+    /// Parameter-server gradient aggregation of `bytes` across `p`
+    /// trainers: the server link carries (p−1) gradients in and (p−1)
+    /// averaged copies out.
+    pub fn param_server_secs(&self, bytes: usize, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        2.0 * self.latency_s + 2.0 * (p - 1) as f64 * bytes as f64 / self.cross_bw
+    }
+
+    /// One remote fetch (used to cost the *avoided* cross-partition
+    /// traffic: global negative sampling, remote neighborhood access).
+    pub fn fetch_secs(&self, bytes: usize) -> f64 {
+        hop_secs(self.latency_s, bytes as f64, self.cross_bw)
+    }
+
+    /// Sync cost per step for the configured algorithm.
+    pub fn sync_secs(&self, algo: crate::config::GradSync, bytes: usize, p: usize) -> f64 {
+        match algo {
+            crate::config::GradSync::Ring => self.ring_allreduce_secs(bytes, p),
+            crate::config::GradSync::ParamServer => self.param_server_secs(bytes, p),
+            crate::config::GradSync::None => 0.0,
+        }
+    }
+}
+
+/// Virtual cluster clock: composes measured per-worker compute with
+/// modeled communication. Synchronous SGD advances all workers to the
+/// same barrier each step: `step_time = max_w(compute_w) + sync`.
+#[derive(Clone, Debug, Default)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self { now: 0.0 }
+    }
+
+    /// Advance past a synchronous step.
+    pub fn step(&mut self, per_worker_compute_secs: &[f64], sync_secs: f64) -> f64 {
+        let max = per_worker_compute_secs.iter().cloned().fold(0.0, f64::max);
+        let dt = max + sync_secs;
+        self.now += dt;
+        dt
+    }
+
+    /// Advance by a serial (coordinator-side) cost.
+    pub fn advance(&mut self, secs: f64) {
+        self.now += secs;
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, GradSync};
+
+    fn model() -> NetworkModel {
+        NetworkModel::new(&ExperimentConfig::tiny().network)
+    }
+
+    #[test]
+    fn single_trainer_costs_nothing() {
+        let m = model();
+        assert_eq!(m.ring_allreduce_secs(1 << 20, 1), 0.0);
+        assert_eq!(m.param_server_secs(1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn ring_beats_param_server_at_scale() {
+        let m = model();
+        let bytes = 8 << 20; // 8 MB of gradients
+        for p in [4, 8, 16] {
+            let ring = m.ring_allreduce_secs(bytes, p);
+            let ps = m.param_server_secs(bytes, p);
+            assert!(
+                ring < ps,
+                "P={p}: ring {ring:.6}s should beat PS {ps:.6}s (§2.2)"
+            );
+        }
+    }
+
+    #[test]
+    fn ring_cost_is_nearly_p_independent_for_large_messages() {
+        // 2(P-1)/P * M/β converges to 2M/β: doubling P shouldn't double cost.
+        let m = model();
+        let bytes = 64 << 20;
+        let t4 = m.ring_allreduce_secs(bytes, 4);
+        let t8 = m.ring_allreduce_secs(bytes, 8);
+        assert!(t8 < t4 * 1.3, "ring scaled badly: {t4:.4} -> {t8:.4}");
+    }
+
+    #[test]
+    fn local_ring_is_faster_than_cross_node() {
+        let m = model();
+        // P=2 fits on one node (trainers_per_node=2) -> local bandwidth.
+        let local = m.ring_allreduce_secs(8 << 20, 2);
+        let mut cfg = ExperimentConfig::tiny().network;
+        cfg.trainers_per_node = 1;
+        let cross = NetworkModel::new(&cfg).ring_allreduce_secs(8 << 20, 2);
+        assert!(local < cross);
+    }
+
+    #[test]
+    fn sync_dispatch() {
+        let m = model();
+        assert_eq!(m.sync_secs(GradSync::None, 1 << 20, 8), 0.0);
+        assert!(m.sync_secs(GradSync::Ring, 1 << 20, 8) > 0.0);
+        assert!(
+            m.sync_secs(GradSync::ParamServer, 1 << 20, 8)
+                > m.sync_secs(GradSync::Ring, 1 << 20, 8)
+        );
+    }
+
+    #[test]
+    fn virtual_clock_composes_max_plus_sync() {
+        let mut clk = VirtualClock::new();
+        let dt = clk.step(&[0.1, 0.3, 0.2], 0.05);
+        assert!((dt - 0.35).abs() < 1e-12);
+        clk.advance(0.1);
+        assert!((clk.now() - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_model_is_free() {
+        let m = NetworkModel::zero();
+        assert_eq!(m.ring_allreduce_secs(123456, 8), 0.0);
+        assert_eq!(m.fetch_secs(1024), 0.0);
+    }
+}

@@ -1,0 +1,205 @@
+//! Artifact planning: measure the exact padded sizes every trainer
+//! configuration will need, so `aot.py` compiles tight buckets.
+//!
+//! Padding is pure waste on the XLA side (masked edges still flow through
+//! the message kernel), and the paper's speedup *mechanism* is that
+//! smaller partitions mean smaller per-batch compute — so buckets must
+//! track real partition sizes or the distributed speedup signal would be
+//! padded away. `kgscale plan` runs the full partition + negative-sample
+//! + batch + compute-graph pipeline for each trainer count (no XLA
+//! involved), records the maxima, and emits the plan JSON that
+//! `python -m compile.aot` consumes.
+
+use crate::config::ExperimentConfig;
+use crate::graph::KnowledgeGraph;
+use crate::partition;
+use crate::sampler::batch::EpochBatches;
+use crate::sampler::compute_graph::ComputeGraphBuilder;
+use crate::sampler::negative::{NegativeSampler, Scope};
+use crate::sampler::PartContext;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Kernel block granularities — keep in sync with python/compile/aot.py.
+pub const EDGE_BLOCK: usize = 512;
+pub const TRIPLE_BLOCK: usize = 1024;
+/// Headroom over the dry-run maxima: later epochs reshuffle batches, so
+/// compute-graph sizes wander a little around the measured peak.
+const MARGIN: f64 = 1.10;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Bucket {
+    pub nodes: usize,
+    pub edges: usize,
+    pub triples: usize,
+}
+
+fn round_up(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+fn pad_bucket(nodes: usize, edges: usize, triples: usize) -> Bucket {
+    Bucket {
+        nodes: round_up(((nodes as f64) * MARGIN) as usize + 1, 64),
+        edges: round_up(((edges as f64) * MARGIN) as usize + 1, EDGE_BLOCK),
+        triples: round_up(((triples as f64) * MARGIN) as usize + 1, TRIPLE_BLOCK),
+    }
+}
+
+/// The artifact plan for one dataset tier.
+#[derive(Clone, Debug)]
+pub struct ArtifactPlan {
+    pub train_buckets: Vec<Bucket>,
+    pub encode_nodes: usize,
+    pub encode_edges: usize,
+    pub score_queries: usize,
+}
+
+/// Dry-run one epoch per trainer count and collect bucket maxima.
+pub fn plan_buckets(
+    cfg: &ExperimentConfig,
+    graph: &KnowledgeGraph,
+    trainer_counts: &[usize],
+) -> Result<ArtifactPlan> {
+    let mut buckets: Vec<Bucket> = Vec::new();
+    for &p in trainer_counts {
+        let mut pcfg = cfg.partition.clone();
+        pcfg.num_partitions = p;
+        let parts = partition::partition_graph(graph, &pcfg, cfg.dataset.seed);
+        let mut max_n = 0usize;
+        let mut max_e = 0usize;
+        let mut max_b = 0usize;
+        for part in &parts {
+            let ctx = PartContext::new(part);
+            let sampler = NegativeSampler::new(&ctx, Scope::LocalCore, graph.num_entities);
+            let mut builder = ComputeGraphBuilder::new(&ctx);
+            let mut rng = Rng::seeded(cfg.train.seed ^ 0xB0C5);
+            let (negs, _) =
+                sampler.sample_epoch(&ctx, cfg.train.negatives_per_positive, &mut rng);
+            let ep = EpochBatches::build(&ctx, negs, cfg.train.batch_edges, &mut rng);
+            for batch in ep.iter() {
+                let cg = builder.build(&ctx, batch, cfg.model.num_layers, graph.num_relations);
+                max_n = max_n.max(cg.num_nodes());
+                max_e = max_e.max(cg.num_edges());
+                max_b = max_b.max(cg.num_triples());
+            }
+        }
+        let b = pad_bucket(max_n, max_e, max_b);
+        crate::log_info!(
+            "plan[{}] P={p}: max cg nodes={max_n} edges={max_e} triples={max_b} -> bucket {b:?}",
+            cfg.name
+        );
+        if !buckets.contains(&b) {
+            buckets.push(b);
+        }
+    }
+    // Merge near-duplicate buckets: drop any bucket dominated by another
+    // within 15% on every axis (compile time is precious on one core).
+    let mut keep: Vec<Bucket> = Vec::new();
+    for b in &buckets {
+        let dominated = buckets.iter().any(|o| {
+            o != b
+                && o.nodes >= b.nodes
+                && o.edges >= b.edges
+                && o.triples >= b.triples
+                && (o.edges as f64) <= b.edges as f64 * 1.15
+                && (o.triples as f64) <= b.triples as f64 * 1.15
+        });
+        if !dominated && !keep.contains(b) {
+            keep.push(*b);
+        }
+    }
+    keep.sort_by_key(|b| (b.edges, b.triples));
+
+    // Full-graph encode sizes: all entities + both message directions of
+    // every train edge (exact; encode always runs the same shape).
+    let encode_nodes = round_up(graph.num_entities, 64);
+    let encode_edges = round_up(2 * graph.train.len(), EDGE_BLOCK);
+    Ok(ArtifactPlan {
+        train_buckets: keep,
+        encode_nodes,
+        encode_edges,
+        score_queries: 512,
+    })
+}
+
+/// Serialize the plan to the JSON `python -m compile.aot --plan` expects.
+pub fn plan_to_json(cfg: &ExperimentConfig, plan: &ArtifactPlan) -> Json {
+    let mode = if cfg.dataset.feature_dim > 0 { "provided" } else { "embedding" };
+    Json::obj(vec![
+        ("name", Json::Str(cfg.name.clone())),
+        ("mode", Json::Str(mode.into())),
+        ("entities", Json::Num(cfg.dataset.entities as f64)),
+        ("relations", Json::Num(cfg.dataset.relations as f64)),
+        ("embed_dim", Json::Num(cfg.model.embed_dim as f64)),
+        ("num_bases", Json::Num(cfg.model.num_bases as f64)),
+        ("num_layers", Json::Num(cfg.model.num_layers as f64)),
+        ("feature_dim", Json::Num(cfg.dataset.feature_dim as f64)),
+        ("dropout", Json::Num(cfg.model.dropout)),
+        (
+            "train_buckets",
+            Json::Arr(
+                plan.train_buckets
+                    .iter()
+                    .map(|b| Json::arr_usize(&[b.nodes, b.edges, b.triples]))
+                    .collect(),
+            ),
+        ),
+        ("encode", Json::arr_usize(&[plan.encode_nodes, plan.encode_edges])),
+        ("score_queries", Json::Num(plan.score_queries as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::graph::generator;
+
+    #[test]
+    fn plan_covers_every_trainer_count() {
+        let cfg = ExperimentConfig::tiny();
+        let g = generator::generate(&cfg.dataset);
+        let plan = plan_buckets(&cfg, &g, &[1, 2, 4]).unwrap();
+        assert!(!plan.train_buckets.is_empty());
+        // Full-batch tiny: the largest bucket must fit the whole graph's
+        // message set (2 * train edges) with margin.
+        let max_edges = plan.train_buckets.iter().map(|b| b.edges).max().unwrap();
+        assert!(max_edges >= 2 * g.train.len());
+        assert!(plan.encode_nodes >= g.num_entities);
+        assert!(plan.encode_edges >= 2 * g.train.len());
+    }
+
+    #[test]
+    fn buckets_are_block_aligned() {
+        let cfg = ExperimentConfig::tiny();
+        let g = generator::generate(&cfg.dataset);
+        let plan = plan_buckets(&cfg, &g, &[1, 2]).unwrap();
+        for b in &plan.train_buckets {
+            assert_eq!(b.edges % EDGE_BLOCK, 0);
+            assert_eq!(b.triples % TRIPLE_BLOCK, 0);
+            assert_eq!(b.nodes % 64, 0);
+        }
+        assert_eq!(plan.encode_edges % EDGE_BLOCK, 0);
+    }
+
+    #[test]
+    fn plan_json_has_required_keys() {
+        let cfg = ExperimentConfig::tiny();
+        let g = generator::generate(&cfg.dataset);
+        let plan = plan_buckets(&cfg, &g, &[1]).unwrap();
+        let j = plan_to_json(&cfg, &plan);
+        for key in ["name", "mode", "entities", "train_buckets", "encode", "score_queries"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.req_str("mode").unwrap(), "embedding");
+    }
+
+    #[test]
+    fn round_up_behaviour() {
+        assert_eq!(round_up(1, 512), 512);
+        assert_eq!(round_up(512, 512), 512);
+        assert_eq!(round_up(513, 512), 1024);
+    }
+}

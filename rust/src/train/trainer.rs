@@ -1,0 +1,453 @@
+//! The distributed trainer (paper §3.1/§3.3, Algorithm 1), executed on a
+//! simulated cluster.
+//!
+//! Physical layout: everything runs on the coordinator thread (the xla
+//! wrapper types are not Send and this machine has one core). Logical
+//! layout: `P` workers, each bound to one self-sufficient partition,
+//! advance in *synchronous steps*. Per step each active worker
+//!
+//!   1. extracts its edge mini-batch's compute graph (measured),
+//!   2. executes the AOT `train_step` artifact → (Σ loss, Σ-gradients)
+//!      (measured),
+//!
+//! then gradients are combined and one optimizer step is applied. The
+//! virtual cluster clock advances by `max_w(compute_w) + T_sync` where
+//! `T_sync` comes from the α-β network model (ring AllReduce by default)
+//! — i.e. measured compute composed with modeled communication, which is
+//! the documented substitution for the paper's 4×2-GPU cluster.
+//!
+//! Mathematical equivalence (§2.2): `train_step` returns the *sum* of
+//! per-triple losses and its gradient; the trainer divides the summed
+//! gradient by the global triple count. The result is bit-comparable to
+//! a single worker processing the union batch — verified by the
+//! `distributed_equals_single` integration test. Because averaging makes
+//! all replicas identical after every step, the coordinator stores the
+//! replica once and hands the same vector to each logical worker.
+
+use crate::config::ExperimentConfig;
+use crate::graph::KnowledgeGraph;
+use crate::metrics::{ComponentTimes, EpochRecord, RunHistory};
+use crate::model::{init_params, Manifest};
+use crate::partition;
+use crate::runtime::{literal_scalar_f32, literal_to_f32, HostTensor, Runtime};
+use crate::sampler::batch::EpochBatches;
+use crate::sampler::compute_graph::{ComputeGraph, ComputeGraphBuilder};
+use crate::sampler::negative::{NegativeSampler, Scope};
+use crate::sampler::{PartContext, TrainTriple};
+use crate::train::netsim::{NetworkModel, VirtualClock};
+use crate::train::optimizer::Adam;
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+use anyhow::Result;
+
+/// Reusable padded input buffers (no per-batch allocation on the hot path).
+struct PadScratch {
+    node_ids: Vec<i32>,
+    node_feat: Vec<f32>,
+    src: Vec<i32>,
+    dst: Vec<i32>,
+    rel: Vec<i32>,
+    emask: Vec<f32>,
+    ts: Vec<i32>,
+    tr: Vec<i32>,
+    tt: Vec<i32>,
+    labels: Vec<f32>,
+    tmask: Vec<f32>,
+}
+
+impl PadScratch {
+    fn new() -> Self {
+        PadScratch {
+            node_ids: Vec::new(),
+            node_feat: Vec::new(),
+            src: Vec::new(),
+            dst: Vec::new(),
+            rel: Vec::new(),
+            emask: Vec::new(),
+            ts: Vec::new(),
+            tr: Vec::new(),
+            tt: Vec::new(),
+            labels: Vec::new(),
+            tmask: Vec::new(),
+        }
+    }
+
+    /// Fill from a compute graph, padding to (n, e, b). `features` is
+    /// the dataset's dense feature matrix (empty in embedding mode).
+    fn fill(
+        &mut self,
+        cg: &ComputeGraph,
+        features: &[f32],
+        feature_dim: usize,
+        n: usize,
+        e: usize,
+        b: usize,
+    ) {
+        assert!(cg.num_nodes() <= n && cg.num_edges() <= e && cg.num_triples() <= b);
+        if feature_dim > 0 {
+            let f = feature_dim;
+            self.node_feat.clear();
+            self.node_feat.resize(n * f, 0.0);
+            for (i, &g) in cg.nodes_global.iter().enumerate() {
+                let gi = g as usize * f;
+                self.node_feat[i * f..(i + 1) * f].copy_from_slice(&features[gi..gi + f]);
+            }
+        } else {
+            self.node_ids.clear();
+            self.node_ids.resize(n, 0);
+            for (i, &g) in cg.nodes_global.iter().enumerate() {
+                self.node_ids[i] = g as i32;
+            }
+        }
+        fill_pad_i32(&mut self.src, &cg.src, e, 0);
+        fill_pad_i32(&mut self.dst, &cg.dst, e, 0);
+        fill_pad_i32(&mut self.rel, &cg.rel, e, 0);
+        fill_pad_f32(&mut self.emask, cg.num_edges(), e);
+        fill_pad_i32(&mut self.ts, &cg.ts, b, 0);
+        fill_pad_i32(&mut self.tr, &cg.tr, b, 0);
+        fill_pad_i32(&mut self.tt, &cg.tt, b, 0);
+        self.labels.clear();
+        self.labels.extend_from_slice(&cg.labels);
+        self.labels.resize(b, 0.0);
+        fill_pad_f32(&mut self.tmask, cg.num_triples(), b);
+    }
+}
+
+fn fill_pad_i32(dst: &mut Vec<i32>, src: &[i32], len: usize, pad: i32) {
+    dst.clear();
+    dst.extend_from_slice(src);
+    dst.resize(len, pad);
+}
+
+fn fill_pad_f32(dst: &mut Vec<f32>, ones: usize, len: usize) {
+    dst.clear();
+    dst.resize(ones, 1.0);
+    dst.resize(len, 0.0);
+}
+
+/// One logical trainer process bound to a partition.
+struct Worker {
+    ctx: PartContext,
+    sampler: NegativeSampler,
+    builder: ComputeGraphBuilder,
+    scratch: PadScratch,
+}
+
+/// Per-step result of one worker's compute phase.
+struct StepOutput {
+    loss_sum: f64,
+    count: f64,
+    compute_secs: f64,
+    cg_secs: f64,
+    exec_secs: f64,
+}
+
+pub struct Trainer<'rt> {
+    pub cfg: ExperimentConfig,
+    pub manifest: Manifest,
+    runtime: &'rt Runtime,
+    workers: Vec<Worker>,
+    pub params: Vec<f32>,
+    opt: Adam,
+    net: NetworkModel,
+    grads_accum: Vec<f32>,
+    grad_scratch: Vec<f32>,
+    /// Copy of the dataset's dense features (empty in embedding mode).
+    features: Vec<f32>,
+    feature_dim: usize,
+    pub history: RunHistory,
+    epoch_counter: usize,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Partition the graph per the config and set up `num_trainers`
+    /// logical workers.
+    pub fn new(
+        cfg: ExperimentConfig,
+        graph: &KnowledgeGraph,
+        runtime: &'rt Runtime,
+        manifest: Manifest,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            manifest.entities >= graph.num_entities,
+            "manifest compiled for {} entities but dataset has {}",
+            manifest.entities,
+            graph.num_entities
+        );
+        let mut pcfg = cfg.partition.clone();
+        pcfg.num_partitions = cfg.train.num_trainers;
+        let parts = partition::partition_graph(graph, &pcfg, cfg.dataset.seed);
+        let scope = if cfg.train.local_negatives { Scope::LocalCore } else { Scope::Global };
+        let workers = parts
+            .iter()
+            .map(|p| {
+                let ctx = PartContext::new(p);
+                let sampler = NegativeSampler::new(&ctx, scope, graph.num_entities);
+                let builder = ComputeGraphBuilder::new(&ctx);
+                Worker { ctx, sampler, builder, scratch: PadScratch::new() }
+            })
+            .collect();
+        if manifest.mode == "provided" {
+            anyhow::ensure!(
+                graph.feature_dim == manifest.feature_dim,
+                "dataset feature_dim {} != manifest feature_dim {}",
+                graph.feature_dim,
+                manifest.feature_dim
+            );
+        }
+        let params = init_params(&manifest, cfg.train.seed);
+        let opt = Adam::from_config(manifest.param_count, &cfg.train);
+        let net = NetworkModel::new(&cfg.network);
+        let grads_accum = vec![0f32; manifest.param_count];
+        let grad_scratch = Vec::with_capacity(manifest.param_count);
+        let (features, feature_dim) = if manifest.mode == "provided" {
+            (graph.features.clone(), graph.feature_dim)
+        } else {
+            (Vec::new(), 0)
+        };
+        // Pre-compile every train_step bucket so epoch timings measure
+        // steady-state execution, not one-off PJRT compilation.
+        for e in &manifest.entries {
+            if let crate::model::EntryInfo::TrainStep { file, .. } = e {
+                runtime.load(file)?;
+            }
+        }
+        Ok(Trainer {
+            cfg,
+            manifest,
+            runtime,
+            workers,
+            params,
+            opt,
+            net,
+            grads_accum,
+            grad_scratch,
+            features,
+            feature_dim,
+            history: RunHistory::default(),
+            epoch_counter: 0,
+        })
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Core-edge counts per worker (workload-balance diagnostics).
+    pub fn worker_core_edges(&self) -> Vec<usize> {
+        self.workers.iter().map(|w| w.ctx.core_edges.len()).collect()
+    }
+
+    /// Run one epoch of synchronous distributed training; returns the
+    /// epoch record (also appended to `history`).
+    pub fn train_epoch(&mut self) -> Result<EpochRecord> {
+        let epoch = self.epoch_counter;
+        self.epoch_counter += 1;
+        let wall = Stopwatch::new();
+        let mut clk = VirtualClock::new();
+        let mut components = ComponentTimes::new();
+        let p = self.workers.len();
+        let graph_entities = self.manifest.entities;
+        let _ = graph_entities;
+
+        // Phase 1 (per paper Algorithm 1 line 3): every worker samples
+        // its epoch negatives and builds its shuffled batch plan.
+        let mut plans: Vec<Vec<Vec<TrainTriple>>> = Vec::with_capacity(p);
+        let mut total_remote = 0usize;
+        for (wid, w) in self.workers.iter_mut().enumerate() {
+            let mut rng = Rng::seeded(
+                self.cfg.train.seed ^ (epoch as u64) << 20 ^ (wid as u64) << 8 | 1,
+            );
+            let (negs, remote) =
+                w.sampler.sample_epoch(&w.ctx, self.cfg.train.negatives_per_positive, &mut rng);
+            total_remote += remote;
+            let ep = EpochBatches::build(&w.ctx, negs, self.cfg.train.batch_edges, &mut rng);
+            plans.push(ep.iter().map(|b| b.to_vec()).collect());
+        }
+        // Remote fetches (global-negative ablation) are charged to the
+        // virtual clock: one embedding row per fetch.
+        if total_remote > 0 {
+            let bytes = self.manifest.embed_dim * 4;
+            clk.advance(total_remote as f64 * self.net.fetch_secs(bytes));
+        }
+
+        let steps = plans.iter().map(|b| b.len()).max().unwrap_or(0);
+        let mut loss_sum = 0f64;
+        let mut count_sum = 0f64;
+
+        for step in 0..steps {
+            self.grads_accum.fill(0.0);
+            let mut step_compute: Vec<f64> = Vec::with_capacity(p);
+            let mut step_loss = 0f64;
+            let mut step_count = 0f64;
+            for wid in 0..p {
+                let Some(batch) = plans[wid].get(step) else { continue };
+                let out = run_worker_batch(
+                    &mut self.workers[wid],
+                    batch,
+                    &self.cfg,
+                    &self.manifest,
+                    self.runtime,
+                    &self.params,
+                    &mut self.grads_accum,
+                    &mut self.grad_scratch,
+                    (&self.features, self.feature_dim),
+                    epoch,
+                )?;
+                step_loss += out.loss_sum;
+                step_count += out.count;
+                components.get_compute_graph.push(out.cg_secs);
+                components.gnn_model.push(out.exec_secs);
+                step_compute.push(out.compute_secs);
+            }
+            // Gradient averaging: modeled AllReduce over the full flat
+            // vector + measured optimizer step.
+            let sync_model_secs = self.net.sync_secs(
+                self.cfg.train.grad_sync,
+                self.manifest.param_count * 4,
+                p,
+            );
+            let opt_sw = Stopwatch::new();
+            if step_count > 0.0 {
+                let inv = (1.0 / step_count) as f32;
+                for g in self.grads_accum.iter_mut() {
+                    *g *= inv;
+                }
+                self.opt.step(&mut self.params, &self.grads_accum);
+            }
+            let opt_secs = opt_sw.elapsed_secs();
+            components.sync_step.push(sync_model_secs + opt_secs);
+            clk.step(&step_compute, sync_model_secs + opt_secs);
+            loss_sum += step_loss;
+            count_sum += step_count;
+        }
+
+        let record = EpochRecord {
+            epoch,
+            mean_loss: if count_sum > 0.0 { loss_sum / count_sum } else { f64::NAN },
+            virtual_secs: clk.now(),
+            wall_secs: wall.elapsed_secs(),
+            num_steps: steps,
+            avg_compute_graph: components.get_compute_graph.mean(),
+            avg_gnn_model: components.gnn_model.mean(),
+            avg_sync_step: components.sync_step.mean(),
+            remote_fetches: total_remote,
+        };
+        self.history.epochs.push(record.clone());
+        Ok(record)
+    }
+
+    /// Record an external evaluation point (Figure 7 series).
+    pub fn record_eval(&mut self, mrr: f64) {
+        let t = self.history.total_virtual_secs();
+        let epoch = self.epoch_counter;
+        self.history.eval_points.push((t, epoch, mrr));
+    }
+}
+
+/// Run one worker's batch (with recursive split if the compute graph
+/// exceeds every compiled bucket), accumulating gradients and loss.
+#[allow(clippy::too_many_arguments)]
+fn run_worker_batch(
+    w: &mut Worker,
+    batch: &[TrainTriple],
+    cfg: &ExperimentConfig,
+    manifest: &Manifest,
+    runtime: &Runtime,
+    params: &[f32],
+    grads_accum: &mut [f32],
+    grad_scratch: &mut Vec<f32>,
+    features: (&[f32], usize),
+    epoch: usize,
+) -> Result<StepOutput> {
+    let hops = manifest.num_layers;
+    let relations = manifest.relations;
+    let cg_sw = Stopwatch::new();
+    let cg = w.builder.build(&w.ctx, batch, hops, relations);
+    let cg_secs = cg_sw.elapsed_secs();
+
+    let bucket = manifest.pick_train_bucket(cg.num_nodes(), cg.num_edges(), cg.num_triples());
+    let Some(crate::model::EntryInfo::TrainStep { file, nodes, edges, triples }) = bucket else {
+        // No bucket fits: split the batch and recurse (sum-losses make
+        // this exactly equivalent).
+        anyhow::ensure!(
+            batch.len() > 1,
+            "compute graph of a single triple (n={}, e={}) exceeds all compiled buckets — \
+             re-run `kgscale plan` + `make artifacts`",
+            cg.num_nodes(),
+            cg.num_edges()
+        );
+        crate::log_warn!(
+            "batch of {} triples overflows buckets (n={} e={}); splitting",
+            batch.len(),
+            cg.num_nodes(),
+            cg.num_edges()
+        );
+        let mid = batch.len() / 2;
+        let a = run_worker_batch(
+            w, &batch[..mid], cfg, manifest, runtime, params, grads_accum, grad_scratch,
+            features, epoch,
+        )?;
+        let b = run_worker_batch(
+            w, &batch[mid..], cfg, manifest, runtime, params, grads_accum, grad_scratch,
+            features, epoch,
+        )?;
+        return Ok(StepOutput {
+            loss_sum: a.loss_sum + b.loss_sum,
+            count: a.count + b.count,
+            compute_secs: a.compute_secs + b.compute_secs + cg_secs,
+            cg_secs: a.cg_secs + b.cg_secs + cg_secs,
+            exec_secs: a.exec_secs + b.exec_secs,
+        });
+    };
+    let (file, nodes, edges, triples) = (file.clone(), *nodes, *edges, *triples);
+
+    let provided = manifest.mode == "provided";
+    w.scratch.fill(&cg, features.0, features.1, nodes, edges, triples);
+
+    let exe = runtime.load(&file)?;
+    let exec_sw = Stopwatch::new();
+    let seed = (cfg.train.seed as i32) ^ ((epoch as i32) << 10);
+    let s = &w.scratch;
+    let node_input = if provided {
+        HostTensor::F32(&s.node_feat, &[nodes as i64, manifest.feature_dim as i64])
+    } else {
+        HostTensor::I32(&s.node_ids, &[nodes as i64])
+    };
+    let outputs = exe.run(&[
+        HostTensor::F32(params, &[params.len() as i64]),
+        node_input,
+        HostTensor::I32(&s.src, &[edges as i64]),
+        HostTensor::I32(&s.dst, &[edges as i64]),
+        HostTensor::I32(&s.rel, &[edges as i64]),
+        HostTensor::F32(&s.emask, &[edges as i64]),
+        HostTensor::I32(&s.ts, &[triples as i64]),
+        HostTensor::I32(&s.tr, &[triples as i64]),
+        HostTensor::I32(&s.tt, &[triples as i64]),
+        HostTensor::F32(&s.labels, &[triples as i64]),
+        HostTensor::F32(&s.tmask, &[triples as i64]),
+        HostTensor::ScalarI32(seed),
+    ])?;
+    let exec_secs = exec_sw.elapsed_secs();
+    anyhow::ensure!(outputs.len() == 2, "train_step returned {} outputs", outputs.len());
+    let loss_sum = literal_scalar_f32(&outputs[0])? as f64;
+    grad_scratch.clear();
+    *grad_scratch = literal_to_f32(&outputs[1])?;
+    anyhow::ensure!(
+        grad_scratch.len() == grads_accum.len(),
+        "gradient length mismatch: {} vs {}",
+        grad_scratch.len(),
+        grads_accum.len()
+    );
+    for (a, g) in grads_accum.iter_mut().zip(grad_scratch.iter()) {
+        *a += g;
+    }
+    Ok(StepOutput {
+        loss_sum,
+        count: batch.len() as f64,
+        compute_secs: cg_secs + exec_secs,
+        cg_secs,
+        exec_secs,
+    })
+}
+

@@ -1,0 +1,68 @@
+//! Micro-benchmark harness for the `cargo bench` targets (criterion is
+//! unavailable offline). Warms up, then runs timed iterations and prints
+//! a stable one-line summary; returns the stats for table assembly.
+
+use super::stats::{humanize_secs, Welford};
+use super::timer::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub min_secs: f64,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:>10}  (min {:>10}, n={})",
+            self.name,
+            humanize_secs(self.mean_secs),
+            humanize_secs(self.std_secs),
+            humanize_secs(self.min_secs),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark `f`, auto-scaling iterations to roughly `budget_secs`.
+pub fn bench(name: &str, budget_secs: f64, mut f: impl FnMut()) -> BenchResult {
+    // Warmup + calibration.
+    let sw = Stopwatch::new();
+    f();
+    let once = sw.elapsed_secs().max(1e-9);
+    let iters = ((budget_secs / once) as u64).clamp(3, 10_000);
+    let mut w = Welford::new();
+    for _ in 0..iters {
+        let sw = Stopwatch::new();
+        f();
+        w.push(sw.elapsed_secs());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_secs: w.mean(),
+        std_secs: w.std(),
+        min_secs: w.min(),
+        iters,
+    };
+    println!("{}", r.summary());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-spin", 0.02, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_secs >= 0.0);
+        assert!(r.min_secs <= r.mean_secs + 1e-12);
+        assert!(r.summary().contains("noop-spin"));
+    }
+}

@@ -1,0 +1,430 @@
+//! Minimal JSON reader/writer.
+//!
+//! `serde_json` is unavailable offline, so the artifact manifest
+//! (`artifacts/<cfg>/manifest.json`, written by `python/compile/aot.py`)
+//! and experiment result files are handled by this small, strict parser.
+//! It supports the full JSON grammar except for exotic number forms
+//! (handles ints, floats, exponents) and rejects trailing garbage.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A parsed JSON value. Object keys keep sorted order (BTreeMap) so that
+/// serialization is deterministic — experiment outputs diff cleanly.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ----- accessors -------------------------------------------------
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// `get` that fails loudly with the key name — manifest parsing wants
+    /// precise errors, not silent `None`s.
+    pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
+        self.get(key).ok_or_else(|| anyhow::anyhow!("missing key {key:?} in JSON object"))
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|x| x as i64)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.req(key)?.as_str().ok_or_else(|| anyhow::anyhow!("key {key:?} is not a string"))
+    }
+
+    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.req(key)?.as_usize().ok_or_else(|| anyhow::anyhow!("key {key:?} is not a number"))
+    }
+
+    pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
+        self.req(key)?.as_arr().ok_or_else(|| anyhow::anyhow!("key {key:?} is not an array"))
+    }
+
+    // ----- construction helpers --------------------------------------
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr_f64(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    pub fn arr_usize(xs: &[usize]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    // ----- serialization ----------------------------------------------
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
+    pub fn to_string_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, true);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize, pretty: bool) {
+        let pad = |out: &mut String, n: usize| {
+            if pretty {
+                out.push('\n');
+                for _ in 0..n {
+                    out.push_str("  ");
+                }
+            }
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 9e15 {
+                    let _ = write!(out, "{}", *x as i64);
+                } else {
+                    let _ = write!(out, "{x}");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, indent + 1);
+                    item.write(out, indent + 1, pretty);
+                }
+                if !v.is_empty() {
+                    pad(out, indent);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, indent + 1);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if pretty {
+                        out.push(' ');
+                    }
+                    v.write(out, indent + 1, pretty);
+                }
+                if !m.is_empty() {
+                    pad(out, indent);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse a JSON document. Rejects trailing non-whitespace.
+pub fn parse(input: &str) -> anyhow::Result<Json> {
+    let bytes = input.as_bytes();
+    let mut p = Parser { bytes, pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != bytes.len() {
+        anyhow::bail!("trailing characters at byte {} of JSON input", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> anyhow::Result<u8> {
+        let b = self.peek().ok_or_else(|| anyhow::anyhow!("unexpected end of JSON input"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> anyhow::Result<()> {
+        let got = self.bump()?;
+        if got != b {
+            anyhow::bail!("expected {:?} at byte {}, got {:?}", b as char, self.pos - 1, got as char);
+        }
+        Ok(())
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => anyhow::bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> anyhow::Result<Json> {
+        for &b in word.as_bytes() {
+            self.expect(b)?;
+        }
+        Ok(v)
+    }
+
+    fn object(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b'}' => return Ok(Json::Obj(map)),
+                c => anyhow::bail!("expected ',' or '}}' in object, got {:?}", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b']' => return Ok(Json::Arr(items)),
+                c => anyhow::bail!("expected ',' or ']' in array, got {:?}", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let b = self.bump()?;
+            match b {
+                b'"' => return Ok(s),
+                b'\\' => match self.bump()? {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'/' => s.push('/'),
+                    b'n' => s.push('\n'),
+                    b't' => s.push('\t'),
+                    b'r' => s.push('\r'),
+                    b'b' => s.push('\u{8}'),
+                    b'f' => s.push('\u{c}'),
+                    b'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let h = self.bump()?;
+                            code = code * 16
+                                + (h as char).to_digit(16).ok_or_else(|| {
+                                    anyhow::anyhow!("bad unicode escape")
+                                })?;
+                        }
+                        s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    c => anyhow::bail!("bad escape \\{}", c as char),
+                },
+                _ => {
+                    // Re-decode UTF-8: back up and take the full char.
+                    self.pos -= 1;
+                    let rest = &self.bytes[self.pos..];
+                    let st = std::str::from_utf8(rest)
+                        .map_err(|_| anyhow::anyhow!("invalid UTF-8 in JSON string"))?;
+                    let c = st.chars().next().unwrap();
+                    s.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let x: f64 = text.parse().map_err(|_| anyhow::anyhow!("bad number {text:?}"))?;
+        Ok(Json::Num(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        for src in ["null", "true", "false", "0", "-12", "3.5", "1e3", "\"hi\\nthere\""] {
+            let v = parse(src).unwrap();
+            let back = parse(&v.to_string()).unwrap();
+            assert_eq!(v, back, "roundtrip failed for {src}");
+        }
+    }
+
+    #[test]
+    fn nested_structures() {
+        let v = parse(r#"{"a": [1, 2, {"b": "c"}], "d": {"e": null}}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[2].req_str("b").unwrap(), "c");
+        assert_eq!(v.get("d").unwrap().get("e"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        assert!(parse("{} x").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{\"a\":}").is_err());
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        let v = parse(r#""Aé""#).unwrap();
+        assert_eq!(v, Json::Str("Aé".to_string()));
+    }
+
+    #[test]
+    fn utf8_passthrough() {
+        let v = parse("\"héllo → wörld\"").unwrap();
+        assert_eq!(v.as_str(), None.or(Some("héllo → wörld")));
+        let back = parse(&v.to_string()).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn pretty_print_parses_back() {
+        let v = Json::obj(vec![
+            ("name", Json::Str("train_step".into())),
+            ("shape", Json::arr_usize(&[64, 32])),
+            ("ok", Json::Bool(true)),
+        ]);
+        let pretty = v.to_string_pretty();
+        assert_eq!(parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn req_errors_name_the_key() {
+        let v = parse("{}").unwrap();
+        let err = v.req("missing_key").unwrap_err().to_string();
+        assert!(err.contains("missing_key"));
+    }
+}

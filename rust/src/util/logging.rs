@@ -1,0 +1,127 @@
+//! Tiny leveled logger (the `log`/`env_logger` crates are unavailable
+//! offline). Controlled by `KGSCALE_LOG` (error|warn|info|debug|trace) or
+//! programmatically via [`set_level`]. Timestamps are seconds since
+//! process start — enough to correlate with benchmark output without
+//! pulling in a date library.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => " WARN",
+            Level::Info => " INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn init_level() -> u8 {
+    let lvl = std::env::var("KGSCALE_LOG")
+        .ok()
+        .and_then(|s| Level::from_str(&s))
+        .unwrap_or(Level::Info) as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    let mut cur = LEVEL.load(Ordering::Relaxed);
+    if cur == u8::MAX {
+        cur = init_level();
+    }
+    (level as u8) <= cur
+}
+
+pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let start = START.get_or_init(Instant::now);
+    let t = start.elapsed().as_secs_f64();
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{t:9.3}s {} {module}] {msg}", level.tag());
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::from_str("info"), Some(Level::Info));
+        assert_eq!(Level::from_str("WARN"), Some(Level::Warn));
+        assert_eq!(Level::from_str("bogus"), None);
+    }
+
+    #[test]
+    fn level_ordering_controls_enabled() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+    }
+}

@@ -1,0 +1,10 @@
+//! Cross-cutting utilities: deterministic RNG, JSON, descriptive stats,
+//! timing, logging. Everything here is dependency-free (std only) because
+//! the build is fully offline — see DESIGN.md.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;

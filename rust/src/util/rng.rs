@@ -1,0 +1,323 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The crate cannot depend on `rand` offline, so we ship a small,
+//! well-tested PRNG stack: [`SplitMix64`] for seeding and
+//! [`Xoshiro256StarStar`] as the workhorse generator (the same pair used
+//! by the reference `rand_xoshiro` implementation). Every stochastic
+//! component in the system (graph generation, partition tie-breaking,
+//! negative sampling, batch shuffling, parameter init) takes an explicit
+//! seed so runs are exactly reproducible.
+
+/// SplitMix64 — used to expand a single `u64` seed into generator state.
+///
+/// Reference: Sebastiano Vigna, <https://prng.di.unimi.it/splitmix64.c>.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Xoshiro256** — fast, high-quality 64-bit PRNG.
+///
+/// Reference: Blackman & Vigna, <https://prng.di.unimi.it/xoshiro256starstar.c>.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Construct from a single seed via SplitMix64 expansion.
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for v in s.iter_mut() {
+            *v = sm.next_u64();
+        }
+        // All-zero state is the one invalid state; SplitMix64 cannot
+        // produce four consecutive zeros, but be defensive anyway.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Self { s }
+    }
+
+    /// Derive an independent child generator (e.g. one per worker).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::seeded(self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)` using Lemire's multiply-shift rejection.
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0, "next_below(0)");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let low = m as u64;
+            if low >= bound {
+                return (m >> 64) as u64;
+            }
+            // Rejection zone: only retry when low < bound and would bias.
+            let threshold = bound.wrapping_neg() % bound;
+            if low >= threshold {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform usize in `[0, bound)`.
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        self.next_below(bound as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Standard normal via Box-Muller (cached spare not kept — callers in
+    /// hot paths should prefer uniform init anyway).
+    pub fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (k must be <= n).
+    /// Uses Floyd's algorithm: O(k) expected, no allocation beyond output.
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_distinct: k={k} > n={n}");
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+}
+
+/// Zipf-distributed sampler over `[0, n)` with exponent `s`, built on the
+/// rejection-inversion method of Hörmann & Derflinger — O(1) per sample,
+/// used by the synthetic KG generator to produce the skewed degree
+/// distributions the paper observes in enterprise graphs.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: f64,
+    s: f64,
+    h_x1: f64,
+    h_n: f64,
+    dense: Option<Vec<f64>>, // small-n fallback: CDF table
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n >= 1);
+        if n < 64 || (s - 1.0).abs() < 1e-9 {
+            // Small domains (or s==1 where the H integral needs the log
+            // branch): build an explicit CDF — exact and cheap.
+            let mut cdf = Vec::with_capacity(n);
+            let mut acc = 0.0;
+            for k in 1..=n {
+                acc += (k as f64).powf(-s);
+                cdf.push(acc);
+            }
+            let total = acc;
+            for v in cdf.iter_mut() {
+                *v /= total;
+            }
+            return Self { n: n as f64, s, h_x1: 0.0, h_n: 0.0, dense: Some(cdf) };
+        }
+        let h = |x: f64| -> f64 { (x.powf(1.0 - s) - 1.0) / (1.0 - s) };
+        Self { n: n as f64, s, h_x1: h(1.5) - 1.0, h_n: h(n as f64 + 0.5), dense: None }
+    }
+
+    /// Sample a value in `[0, n)` (0-based; rank 0 is most frequent).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        if let Some(cdf) = &self.dense {
+            let u = rng.next_f64();
+            let idx = match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+                Ok(i) => i,
+                Err(i) => i,
+            };
+            return idx.min(cdf.len() - 1);
+        }
+        let s = self.s;
+        let h_inv = |x: f64| -> f64 { (1.0 + x * (1.0 - s)).powf(1.0 / (1.0 - s)) };
+        loop {
+            let u = self.h_x1 + rng.next_f64() * (self.h_n - self.h_x1);
+            let x = h_inv(u);
+            let k = (x + 0.5).floor().max(1.0);
+            let h = |y: f64| -> f64 { (y.powf(1.0 - s) - 1.0) / (1.0 - s) };
+            if u >= h(k + 0.5) - k.powf(-s) {
+                return (k as usize - 1).min(self.n as usize - 1);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // First outputs for seed=0 from the reference C implementation.
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(sm.next_u64(), 0x6E789E6AA1B965F4);
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let mut a = Rng::seeded(42);
+        let mut b = Rng::seeded(42);
+        let mut c = Rng::seeded(43);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn next_below_in_range_and_roughly_uniform() {
+        let mut rng = Rng::seeded(7);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            let v = rng.next_below(10) as usize;
+            counts[v] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "bucket count {c} far from uniform");
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = Rng::seeded(1);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::seeded(3);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut rng = Rng::seeded(11);
+        for _ in 0..50 {
+            let n = 1 + rng.below(200);
+            let k = rng.below(n + 1);
+            let s = rng.sample_distinct(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k, "duplicates in sample");
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let mut rng = Rng::seeded(5);
+        let z = Zipf::new(1000, 1.2);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // Rank 0 should dominate rank 100 heavily under s=1.2.
+        assert!(counts[0] > counts[99] * 5, "zipf not skewed: {} vs {}", counts[0], counts[99]);
+    }
+
+    #[test]
+    fn zipf_small_n_dense_path() {
+        let mut rng = Rng::seeded(9);
+        let z = Zipf::new(3, 1.0);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[1] && counts[1] > counts[2]);
+    }
+
+    #[test]
+    fn fork_streams_decorrelated() {
+        let mut root = Rng::seeded(42);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let xa: Vec<u64> = (0..4).map(|_| a.next_u64()).collect();
+        let xb: Vec<u64> = (0..4).map(|_| b.next_u64()).collect();
+        assert_ne!(xa, xb);
+    }
+}

@@ -1,0 +1,89 @@
+//! Timing utilities.
+//!
+//! Two clocks matter in this codebase:
+//!
+//! * the **wall clock** (`Stopwatch`) — what actually elapsed on this
+//!   machine, used for benchmarks and profiling; and
+//! * the **virtual cluster clock** (`train::netsim::VirtualClock`) — the
+//!   simulated time of a P-trainer cluster, composed from measured
+//!   per-worker compute and a modeled interconnect (see DESIGN.md
+//!   "Substitutions").
+//!
+//! This module provides the wall-clock half plus a scoped-timing helper.
+
+use std::time::{Duration, Instant};
+
+/// Simple resettable stopwatch.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Read and restart — convenient for phase-by-phase timing.
+    pub fn lap_secs(&mut self) -> f64 {
+        let t = self.elapsed_secs();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::new();
+    let out = f();
+    (out, sw.elapsed_secs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_is_monotone() {
+        let sw = Stopwatch::new();
+        let a = sw.elapsed_secs();
+        std::thread::sleep(Duration::from_millis(2));
+        let b = sw.elapsed_secs();
+        assert!(b >= a);
+        assert!(b >= 0.002);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        let first = sw.lap_secs();
+        let second = sw.elapsed_secs();
+        assert!(first >= 0.002);
+        assert!(second < first);
+    }
+
+    #[test]
+    fn timed_returns_value_and_duration() {
+        let (v, t) = timed(|| {
+            std::thread::sleep(Duration::from_millis(1));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(t >= 0.001);
+    }
+}

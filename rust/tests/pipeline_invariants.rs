@@ -1,0 +1,254 @@
+//! Integration + property tests over the data pipeline (no XLA needed):
+//! partitioning, expansion, sampling, batching, compute graphs, and
+//! AllReduce — randomized across graphs via the in-repo prop harness.
+
+use kgscale::config::{PartitionConfig, PartitionStrategy};
+use kgscale::graph::Triple;
+use kgscale::partition;
+use kgscale::sampler::batch::EpochBatches;
+use kgscale::sampler::compute_graph::ComputeGraphBuilder;
+use kgscale::sampler::negative::{NegativeSampler, Scope};
+use kgscale::sampler::PartContext;
+use kgscale::testing::{gen, prop_check};
+use kgscale::train::allreduce::{param_server_sum, ring_allreduce_sum};
+use kgscale::util::rng::Rng;
+use std::collections::HashSet;
+
+/// Core edges of every strategy are an exact disjoint cover of the train
+/// set, for random graphs and partition counts.
+#[test]
+fn prop_partition_disjoint_cover() {
+    prop_check("partition-disjoint-cover", 0xC0FFEE, 6, |rng| {
+        let g = gen::small_kg(rng);
+        let p = gen::partitions(rng);
+        for strategy in [
+            PartitionStrategy::Hdrf,
+            PartitionStrategy::Dbh,
+            PartitionStrategy::MetisLike,
+            PartitionStrategy::Random,
+        ] {
+            let cfg = PartitionConfig { strategy, num_partitions: p, hops: 2, hdrf_lambda: 1.0 };
+            let parts = partition::partition_graph(&g, &cfg, rng.next_u64());
+            let mut seen: HashSet<u64> = HashSet::new();
+            let mut total = 0;
+            for part in &parts {
+                for e in &part.core_edges {
+                    assert!(seen.insert(e.key()), "{strategy:?}: duplicate core edge");
+                    total += 1;
+                }
+            }
+            assert_eq!(total, g.train.len(), "{strategy:?}: cover incomplete");
+        }
+    });
+}
+
+/// Self-sufficiency: for every partition, every vertex within hops-1 of a
+/// core vertex has all incident train edges present locally.
+#[test]
+fn prop_expansion_self_sufficiency() {
+    prop_check("expansion-self-sufficiency", 0xBEEF, 4, |rng| {
+        let g = gen::small_kg(rng);
+        let p = 2 + rng.below(4);
+        let hops = 1 + rng.below(2); // 1 or 2
+        let cfg = PartitionConfig {
+            strategy: PartitionStrategy::Hdrf,
+            num_partitions: p,
+            hops,
+            hdrf_lambda: 1.0,
+        };
+        let parts = partition::partition_graph(&g, &cfg, rng.next_u64());
+        let csr = kgscale::graph::Csr::build(g.num_entities, &g.train);
+        for part in &parts {
+            let have: HashSet<u64> =
+                part.core_edges.iter().chain(&part.support_edges).map(Triple::key).collect();
+            // BFS distances from core vertices.
+            let mut dist = vec![u32::MAX; g.num_entities];
+            let mut q = Vec::new();
+            for e in &part.core_edges {
+                for v in [e.s, e.t] {
+                    if dist[v as usize] == u32::MAX {
+                        dist[v as usize] = 0;
+                        q.push(v);
+                    }
+                }
+            }
+            let mut head = 0;
+            while head < q.len() {
+                let v = q[head];
+                head += 1;
+                let d = dist[v as usize];
+                if d as usize >= hops {
+                    continue;
+                }
+                for &eid in csr.in_edges(v).iter().chain(csr.out_edges(v)) {
+                    let e = g.train[eid as usize];
+                    assert!(
+                        have.contains(&e.key()),
+                        "partition {} misses edge incident to dist-{d} vertex",
+                        part.id
+                    );
+                    let w = if e.s == v { e.t } else { e.s };
+                    if dist[w as usize] == u32::MAX {
+                        dist[w as usize] = d + 1;
+                        q.push(w);
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Negative samples stay inside the core-vertex domain and never collide
+/// with partition positives (modulo the bounded-retry fallback).
+#[test]
+fn prop_negative_sampler_domain() {
+    prop_check("negative-domain", 0xDEAD, 5, |rng| {
+        let g = gen::small_kg(rng);
+        let p = gen::partitions(rng);
+        let cfg = PartitionConfig {
+            strategy: PartitionStrategy::Hdrf,
+            num_partitions: p,
+            hops: 2,
+            hdrf_lambda: 1.0,
+        };
+        let parts = partition::partition_graph(&g, &cfg, rng.next_u64());
+        for part in &parts {
+            let ctx = PartContext::new(part);
+            let core: HashSet<u32> = ctx.core_vertices.iter().copied().collect();
+            let sampler = NegativeSampler::new(&ctx, Scope::LocalCore, g.num_entities);
+            let mut srng = Rng::seeded(rng.next_u64());
+            let (negs, remote) = sampler.sample_epoch(&ctx, 2, &mut srng);
+            assert_eq!(remote, 0);
+            assert_eq!(negs.len(), ctx.core_edges.len() * 2);
+            for n in &negs {
+                assert!(core.contains(&n.s) && core.contains(&n.t));
+                assert!(n.s != n.t, "self-loop negative");
+            }
+        }
+    });
+}
+
+/// Batching covers every triple exactly once with correct labels.
+#[test]
+fn prop_batching_partition_of_epoch() {
+    prop_check("batching-exact-cover", 0xFACE, 5, |rng| {
+        let g = gen::small_kg(rng);
+        let cfg = PartitionConfig {
+            strategy: PartitionStrategy::Hdrf,
+            num_partitions: 1 + rng.below(4),
+            hops: 2,
+            hdrf_lambda: 1.0,
+        };
+        let parts = partition::partition_graph(&g, &cfg, 7);
+        let ctx = PartContext::new(&parts[0]);
+        let sampler = NegativeSampler::new(&ctx, Scope::LocalCore, g.num_entities);
+        let mut srng = Rng::seeded(rng.next_u64());
+        let s = 1 + rng.below(3);
+        let (negs, _) = sampler.sample_epoch(&ctx, s, &mut srng);
+        let batch_pos = [0usize, 16, 64][rng.below(3)];
+        let ep = EpochBatches::build(&ctx, negs, batch_pos, &mut srng);
+        let total: usize = ep.iter().map(|b| b.len()).sum();
+        assert_eq!(total, ctx.core_edges.len() * (1 + s));
+        let pos = ep.iter().flatten().filter(|t| t.label == 1.0).count();
+        assert_eq!(pos, ctx.core_edges.len());
+    });
+}
+
+/// The compute graph of a batch contains every batch endpoint, edge
+/// indices in range, and grows monotonically with hops.
+#[test]
+fn prop_compute_graph_well_formed() {
+    prop_check("compute-graph-well-formed", 0xF00D, 5, |rng| {
+        let g = gen::small_kg(rng);
+        let cfg = PartitionConfig {
+            strategy: PartitionStrategy::Hdrf,
+            num_partitions: 1 + rng.below(3),
+            hops: 2,
+            hdrf_lambda: 1.0,
+        };
+        let parts = partition::partition_graph(&g, &cfg, 3);
+        for part in parts.iter().take(2) {
+            let ctx = PartContext::new(part);
+            if ctx.core_edges.is_empty() {
+                continue;
+            }
+            let mut builder = ComputeGraphBuilder::new(&ctx);
+            let take = (1 + rng.below(32)).min(ctx.core_edges.len());
+            let batch: Vec<_> = ctx.core_edges[..take]
+                .iter()
+                .map(|e| kgscale::sampler::TrainTriple { s: e.s, r: e.r, t: e.t, label: 1.0 })
+                .collect();
+            let mut prev_nodes = 0;
+            for hops in 1..=2 {
+                let cg = builder.build(&ctx, &batch, hops, g.num_relations);
+                assert!(cg.num_nodes() >= prev_nodes);
+                prev_nodes = cg.num_nodes();
+                let n = cg.num_nodes() as i32;
+                for i in 0..cg.num_edges() {
+                    assert!(cg.src[i] < n && cg.dst[i] < n);
+                    assert!((cg.rel[i] as usize) < 2 * g.num_relations);
+                }
+                for i in 0..cg.num_triples() {
+                    assert!(cg.ts[i] < n && cg.tt[i] < n);
+                }
+            }
+        }
+    });
+}
+
+/// Ring AllReduce == serial sum == parameter-server, under random sizes.
+#[test]
+fn prop_allreduce_equivalence() {
+    prop_check("allreduce-equivalence", 0xAB5E, 8, |rng| {
+        let p = 2 + rng.below(7);
+        let n = 1 + rng.below(2000);
+        let mut bufs: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..n).map(|_| rng.uniform_f32(-2.0, 2.0)).collect())
+            .collect();
+        let mut serial = vec![0f32; n];
+        for b in &bufs {
+            for (s, x) in serial.iter_mut().zip(b) {
+                *s += x;
+            }
+        }
+        let mut ps = bufs.clone();
+        ring_allreduce_sum(&mut bufs);
+        param_server_sum(&mut ps);
+        for w in 0..p {
+            for i in 0..n {
+                let tol = 1e-4 * serial[i].abs().max(1.0);
+                assert!((bufs[w][i] - serial[i]).abs() <= tol, "ring diverges at [{w}][{i}]");
+                assert!((ps[w][i] - serial[i]).abs() <= tol, "ps diverges at [{w}][{i}]");
+            }
+        }
+    });
+}
+
+/// Determinism: the full pipeline (partition -> sample -> batch -> CG)
+/// is bit-identical across runs with the same seeds.
+#[test]
+fn prop_pipeline_determinism() {
+    prop_check("pipeline-determinism", 0x5EED, 3, |rng| {
+        let g = gen::small_kg(rng);
+        let seed = rng.next_u64();
+        let run = |g: &kgscale::graph::KnowledgeGraph| {
+            let cfg = PartitionConfig {
+                strategy: PartitionStrategy::Hdrf,
+                num_partitions: 3,
+                hops: 2,
+                hdrf_lambda: 1.0,
+            };
+            let parts = partition::partition_graph(g, &cfg, seed);
+            let ctx = PartContext::new(&parts[1]);
+            let sampler = NegativeSampler::new(&ctx, Scope::LocalCore, g.num_entities);
+            let mut srng = Rng::seeded(seed);
+            let (negs, _) = sampler.sample_epoch(&ctx, 1, &mut srng);
+            let ep = EpochBatches::build(&ctx, negs, 32, &mut srng);
+            let mut builder = ComputeGraphBuilder::new(&ctx);
+            let first = ep.iter().next().unwrap();
+            let cg = builder.build(&ctx, first, 2, g.num_relations);
+            (cg.nodes_global.clone(), cg.src.clone(), cg.rel.clone(), cg.labels.clone())
+        };
+        assert_eq!(run(&g), run(&g));
+    });
+}
