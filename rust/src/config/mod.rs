@@ -66,6 +66,11 @@ pub enum GradSync {
     Ring,
     /// Parameter-server baseline (§2.2 comparison).
     ParamServer,
+    /// Sparse all-gather (DGL-KE-style): workers exchange only the
+    /// touched embedding rows + the dense tail, so sync bytes scale with
+    /// the batch's compute graph, not param_count. Requires a sparse
+    /// gradient mode (validated).
+    Sparse,
     /// No sync — each worker drifts; used only in ablations/tests.
     None,
 }
@@ -75,8 +80,64 @@ impl GradSync {
         match s {
             "ring" => Ok(GradSync::Ring),
             "param_server" => Ok(GradSync::ParamServer),
+            "sparse" => Ok(GradSync::Sparse),
             "none" => Ok(GradSync::None),
-            other => bail!("unknown grad_sync {other:?} (want ring|param_server|none)"),
+            other => bail!("unknown grad_sync {other:?} (want ring|param_server|sparse|none)"),
+        }
+    }
+}
+
+/// How gradients are accumulated and applied each synchronous step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GradMode {
+    /// Reference path: dense accumulator, dense Adam. O(param_count) per
+    /// step.
+    Dense,
+    /// Row-sparse accumulation keyed off the compute graph's touched
+    /// entity rows, then dense Adam over the scattered gradient —
+    /// bit-identical results to `Dense`, with O(touched) accumulate/zero
+    /// and sparse-sized sync traffic.
+    Sparse,
+    /// Row-sparse accumulation + lazy Adam (DGL-KE style): optimizer
+    /// moments and parameters update only at touched rows. O(touched)
+    /// end to end; not bit-equivalent to `Dense` (documented deviation
+    /// in `train::optimizer`).
+    SparseLazy,
+}
+
+impl GradMode {
+    pub fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "dense" => Ok(GradMode::Dense),
+            "sparse" => Ok(GradMode::Sparse),
+            "sparse_lazy" => Ok(GradMode::SparseLazy),
+            other => bail!("unknown grad_mode {other:?} (want dense|sparse|sparse_lazy)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GradMode::Dense => "dense",
+            GradMode::Sparse => "sparse",
+            GradMode::SparseLazy => "sparse_lazy",
+        }
+    }
+
+    /// Stable on-disk tag (checkpoint header).
+    pub fn as_u32(&self) -> u32 {
+        match self {
+            GradMode::Dense => 0,
+            GradMode::Sparse => 1,
+            GradMode::SparseLazy => 2,
+        }
+    }
+
+    pub fn from_u32(v: u32) -> Result<Self> {
+        match v {
+            0 => Ok(GradMode::Dense),
+            1 => Ok(GradMode::Sparse),
+            2 => Ok(GradMode::SparseLazy),
+            other => bail!("unknown grad_mode tag {other}"),
         }
     }
 }
@@ -94,6 +155,9 @@ pub struct TrainConfig {
     pub negatives_per_positive: usize,
     pub num_trainers: usize,
     pub grad_sync: GradSync,
+    /// Gradient accumulation/optimizer path; `dense` preserves the
+    /// original semantics exactly.
+    pub grad_mode: GradMode,
     /// Negative sampling scope: true = constraint-based/local (paper),
     /// false = global baseline (ablation; models cross-partition fetches).
     pub local_negatives: bool,
@@ -212,6 +276,7 @@ impl ExperimentConfig {
                 negatives_per_positive: 1,
                 num_trainers: 1,
                 grad_sync: GradSync::Ring,
+                grad_mode: GradMode::Dense,
                 local_negatives: true,
                 seed: 7,
                 eval_every: 0,
@@ -278,6 +343,9 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_str("train.grad_sync") {
             cfg.train.grad_sync = GradSync::from_str(v)?;
         }
+        if let Some(v) = doc.get_str("train.grad_mode") {
+            cfg.train.grad_mode = GradMode::from_str(v)?;
+        }
         // partition
         if let Some(v) = doc.get_str("partition.strategy") {
             cfg.partition.strategy = PartitionStrategy::from_str(v)?;
@@ -328,6 +396,13 @@ impl ExperimentConfig {
         if self.train.negatives_per_positive == 0 {
             bail!("train.negatives_per_positive must be >= 1");
         }
+        if self.train.grad_sync == GradSync::Sparse && self.train.grad_mode == GradMode::Dense {
+            bail!(
+                "train.grad_sync = \"sparse\" needs a sparse gradient path; set \
+                 train.grad_mode = \"sparse\" or \"sparse_lazy\" (dense accumulation \
+                 does not track touched rows)"
+            );
+        }
         Ok(())
     }
 
@@ -361,6 +436,7 @@ impl ExperimentConfig {
                     ("epochs", Json::Num(self.train.epochs as f64)),
                     ("batch_edges", Json::Num(self.train.batch_edges as f64)),
                     ("num_trainers", Json::Num(self.train.num_trainers as f64)),
+                    ("grad_mode", Json::Str(self.train.grad_mode.name().to_string())),
                 ]),
             ),
         ])
@@ -425,6 +501,33 @@ num_partitions = 4
         assert_eq!(cfg.train.grad_sync, GradSync::ParamServer);
         assert_eq!(cfg.partition.strategy, PartitionStrategy::Dbh);
         assert_eq!(cfg.partition.num_partitions, 4);
+    }
+
+    #[test]
+    fn grad_mode_parses_and_sparse_sync_is_gated() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[train]\ngrad_mode = \"sparse_lazy\"\ngrad_sync = \"sparse\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.train.grad_mode, GradMode::SparseLazy);
+        assert_eq!(cfg.train.grad_sync, GradSync::Sparse);
+        // Default preserves the original dense semantics.
+        assert_eq!(ExperimentConfig::tiny().train.grad_mode, GradMode::Dense);
+        // Sparse sync without a sparse gradient path is rejected.
+        let err = ExperimentConfig::from_toml_str("[train]\ngrad_sync = \"sparse\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("grad_mode"), "got: {err}");
+        assert!(ExperimentConfig::from_toml_str("[train]\ngrad_mode = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn grad_mode_tag_roundtrip() {
+        for m in [GradMode::Dense, GradMode::Sparse, GradMode::SparseLazy] {
+            assert_eq!(GradMode::from_u32(m.as_u32()).unwrap(), m);
+            assert_eq!(GradMode::from_str(m.name()).unwrap(), m);
+        }
+        assert!(GradMode::from_u32(9).is_err());
     }
 
     #[test]

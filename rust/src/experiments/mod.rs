@@ -273,7 +273,15 @@ pub fn fig6(rows: &[Table3Row], dataset: &str) -> (Figure, Table) {
     );
     let mut t = Table::new(
         &format!("Figure 6b: avg per-batch component time (virtual s), {dataset}"),
-        &["#Trainers", "getComputeGraph", "GNNmodel (fwd+loss+bwd)", "sync+step", "#batches/epoch"],
+        &[
+            "#Trainers",
+            "getComputeGraph",
+            "GNNmodel (fwd+loss+bwd)",
+            "sync+step",
+            "#batches/epoch",
+            "touched rows/step",
+            "sync KB/step",
+        ],
     );
     for r in rows {
         let last = r.history.epochs.last().expect("history nonempty");
@@ -283,6 +291,9 @@ pub fn fig6(rows: &[Table3Row], dataset: &str) -> (Figure, Table) {
             format!("{:.4}", last.avg_gnn_model),
             format!("{:.4}", last.avg_sync_step),
             last.num_steps.to_string(),
+            // 0 under dense mode, which does not track touched rows.
+            format!("{:.0}", last.avg_touched_rows),
+            format!("{:.1}", last.avg_sync_bytes / 1024.0),
         ]);
     }
     (fig, t)

@@ -45,6 +45,14 @@ pub struct EpochRecord {
     /// Simulated remote fetches charged this epoch (global-negative
     /// ablation; 0 under constraint-based sampling).
     pub remote_fetches: usize,
+    /// Mean embedding rows touched per synchronous step (union across
+    /// workers) under the sparse gradient modes; 0.0 in dense mode,
+    /// which does not track touched rows.
+    pub avg_touched_rows: f64,
+    /// Mean gradient bytes a worker puts on the wire per step: the
+    /// sparse transfer size under `grad_sync = "sparse"`, else the dense
+    /// `param_count * 4`.
+    pub avg_sync_bytes: f64,
 }
 
 /// Full run history plus evaluation checkpoints (Figure 7's series).
@@ -99,6 +107,8 @@ mod tests {
                 avg_gnn_model: 0.05,
                 avg_sync_step: 0.01,
                 remote_fetches: 0,
+                avg_touched_rows: 128.0,
+                avg_sync_bytes: 128.0 * 16.0 * 4.0,
             });
         }
         h.eval_points.push((2.0, 0, 0.1));

@@ -19,6 +19,36 @@ pub struct ParamInfo {
     pub fan_out: usize,
 }
 
+/// Resolved location of the entity-embedding table inside the flat
+/// parameter vector — the key the row-sparse gradient path is built on
+/// (see `train::sparse`). `rows` is the *padded* table height from the
+/// manifest (≥ the dataset's entity count), `dim` the embedding width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EmbeddingSegment {
+    /// First flat index of the table.
+    pub offset: usize,
+    /// Number of embedding rows.
+    pub rows: usize,
+    /// Floats per row.
+    pub dim: usize,
+}
+
+impl EmbeddingSegment {
+    /// Total floats in the segment.
+    pub fn len(&self) -> usize {
+        self.rows * self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// One-past-the-end flat index.
+    pub fn end(&self) -> usize {
+        self.offset + self.len()
+    }
+}
+
 #[derive(Clone, Debug)]
 pub enum EntryInfo {
     TrainStep { file: String, nodes: usize, edges: usize, triples: usize },
@@ -180,6 +210,17 @@ impl Manifest {
         anyhow::bail!("manifest has no score entry")
     }
 
+    /// Resolve the `ent_emb` segment from the param layout, if present.
+    /// Returns `None` in "provided"-features mode (no trainable embedding
+    /// table) — callers then treat the whole vector as the dense tail.
+    pub fn embedding_segment(&self) -> Option<EmbeddingSegment> {
+        let p = self.params.iter().find(|p| p.name == "ent_emb")?;
+        if p.shape.len() != 2 {
+            return None;
+        }
+        Some(EmbeddingSegment { offset: p.offset, rows: p.shape[0], dim: p.shape[1] })
+    }
+
     pub fn param(&self, name: &str) -> Result<&ParamInfo> {
         self.params
             .iter()
@@ -251,6 +292,20 @@ pub(crate) mod tests {
     fn bad_version_rejected() {
         let broken = SAMPLE.replace("\"version\": 1", "\"version\": 99");
         assert!(Manifest::parse(&broken).is_err());
+    }
+
+    #[test]
+    fn embedding_segment_resolves_from_layout() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let seg = m.embedding_segment().unwrap();
+        assert_eq!(seg, EmbeddingSegment { offset: 0, rows: 8, dim: 16 });
+        assert_eq!(seg.len(), 128);
+        assert_eq!(seg.end(), 128);
+        // Without an ent_emb param (provided-features mode) there is no
+        // segment.
+        let provided = SAMPLE.replace("\"name\": \"ent_emb\"", "\"name\": \"w_in\"");
+        let m2 = Manifest::parse(&provided).unwrap();
+        assert!(m2.embedding_segment().is_none());
     }
 
     #[test]

@@ -6,5 +6,5 @@
 pub mod manifest;
 pub mod params;
 
-pub use manifest::{EntryInfo, Manifest, ParamInfo};
+pub use manifest::{EmbeddingSegment, EntryInfo, Manifest, ParamInfo};
 pub use params::init_params;

@@ -74,6 +74,18 @@ pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }
 
+/// Read a f32 output literal into a caller-owned buffer, reusing its
+/// allocation. The hot-path variant of [`literal_to_f32`]: per-batch
+/// gradient readback goes through this so `grad_scratch` is allocated
+/// once per trainer, not once per batch.
+pub fn literal_to_f32_into(lit: &xla::Literal, out: &mut Vec<f32>) -> Result<()> {
+    let n = lit.element_count();
+    out.clear();
+    out.resize(n, 0.0);
+    lit.copy_raw_to(out.as_mut_slice())?;
+    Ok(())
+}
+
 /// Read a scalar f32 output.
 pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
     Ok(lit.get_first_element::<f32>()?)
@@ -143,6 +155,24 @@ mod tests {
         assert_eq!(literal_to_f32(&lit).unwrap(), data.to_vec());
         let lit2 = build_literal(&HostTensor::F32(&data, &[2, 2])).unwrap();
         assert_eq!(lit2.element_count(), 4);
+    }
+
+    #[test]
+    fn f32_literal_into_reuses_buffer() {
+        let data = [5.0f32, 6.0, 7.0];
+        let lit = build_literal(&HostTensor::F32(&data, &[3])).unwrap();
+        // Pre-sized with stale garbage: must be fully overwritten.
+        let mut buf = vec![9.9f32; 8];
+        buf.reserve(8);
+        let cap = buf.capacity();
+        literal_to_f32_into(&lit, &mut buf).unwrap();
+        assert_eq!(buf, data.to_vec());
+        assert_eq!(buf.capacity(), cap, "readback must not reallocate");
+        // Reuse for a second literal.
+        let data2 = [1.0f32, 2.0];
+        let lit2 = build_literal(&HostTensor::F32(&data2, &[2])).unwrap();
+        literal_to_f32_into(&lit2, &mut buf).unwrap();
+        assert_eq!(buf, data2.to_vec());
     }
 
     #[test]

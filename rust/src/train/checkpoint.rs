@@ -1,29 +1,49 @@
 //! Checkpointing: flat parameters + Adam state to a small binary format.
 //!
 //! Layout (little-endian):
-//!   magic "KGSC" | version u32 | param_count u64 | adam_t u64
-//!   | params f32[n] | adam_m f32[n] | adam_v f32[n]
+//!   v1: magic "KGSC" | version u32 | param_count u64 | adam_t u64
+//!       | params f32[n] | adam_m f32[n] | adam_v f32[n]
+//!   v2: magic "KGSC" | version u32 | grad_mode u32 | param_count u64
+//!       | adam_t u64 | params f32[n] | adam_m f32[n] | adam_v f32[n]
+//!
+//! v2 adds the gradient mode so lazy-Adam state is restored under the
+//! semantics it was produced with: lazy moments are only valid for
+//! rows that were actually touched, so silently resuming a
+//! `sparse_lazy` run as `dense` (or vice versa) would change the
+//! optimizer trajectory without warning. Loading still accepts v1
+//! files, which are tagged `dense` (the only mode that existed then).
 
+use crate::config::GradMode;
 use anyhow::{Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"KGSC";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 pub struct Checkpoint {
     pub params: Vec<f32>,
     pub adam_m: Vec<f32>,
     pub adam_v: Vec<f32>,
     pub adam_t: u64,
+    /// Gradient mode the optimizer state was produced under.
+    pub grad_mode: GradMode,
 }
 
-pub fn save(path: &Path, params: &[f32], adam_m: &[f32], adam_v: &[f32], adam_t: u64) -> Result<()> {
+pub fn save(
+    path: &Path,
+    params: &[f32],
+    adam_m: &[f32],
+    adam_v: &[f32],
+    adam_t: u64,
+    grad_mode: GradMode,
+) -> Result<()> {
     anyhow::ensure!(params.len() == adam_m.len() && params.len() == adam_v.len());
     let file = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
     let mut w = std::io::BufWriter::new(file);
     w.write_all(MAGIC)?;
     w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&grad_mode.as_u32().to_le_bytes())?;
     w.write_all(&(params.len() as u64).to_le_bytes())?;
     w.write_all(&adam_t.to_le_bytes())?;
     for arr in [params, adam_m, adam_v] {
@@ -43,7 +63,17 @@ pub fn load(path: &Path) -> Result<Checkpoint> {
     anyhow::ensure!(&magic == MAGIC, "not a kgscale checkpoint");
     let mut u32b = [0u8; 4];
     r.read_exact(&mut u32b)?;
-    anyhow::ensure!(u32::from_le_bytes(u32b) == VERSION, "unsupported checkpoint version");
+    let version = u32::from_le_bytes(u32b);
+    anyhow::ensure!(
+        version == 1 || version == VERSION,
+        "unsupported checkpoint version {version}"
+    );
+    let grad_mode = if version >= 2 {
+        r.read_exact(&mut u32b)?;
+        GradMode::from_u32(u32::from_le_bytes(u32b))?
+    } else {
+        GradMode::Dense
+    };
     let mut u64b = [0u8; 8];
     r.read_exact(&mut u64b)?;
     let n = u64::from_le_bytes(u64b) as usize;
@@ -60,7 +90,7 @@ pub fn load(path: &Path) -> Result<Checkpoint> {
     let params = read_vec(n)?;
     let adam_m = read_vec(n)?;
     let adam_v = read_vec(n)?;
-    Ok(Checkpoint { params, adam_m, adam_v, adam_t })
+    Ok(Checkpoint { params, adam_m, adam_v, adam_t, grad_mode })
 }
 
 #[cfg(test)]
@@ -75,12 +105,54 @@ mod tests {
         let params = vec![1.0f32, -2.5, 3.25];
         let m = vec![0.1f32, 0.2, 0.3];
         let v = vec![0.01f32, 0.02, 0.03];
-        save(&path, &params, &m, &v, 42).unwrap();
+        save(&path, &params, &m, &v, 42, GradMode::Dense).unwrap();
         let ck = load(&path).unwrap();
         assert_eq!(ck.params, params);
         assert_eq!(ck.adam_m, m);
         assert_eq!(ck.adam_v, v);
         assert_eq!(ck.adam_t, 42);
+        assert_eq!(ck.grad_mode, GradMode::Dense);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn lazy_adam_state_roundtrips_with_mode_tag() {
+        let dir =
+            std::env::temp_dir().join(format!("kgscale-ckpt-lazy-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lazy.ckpt");
+        // Lazy moments: zero at never-touched rows, nonzero elsewhere.
+        let params = vec![0.5f32, 1.5, -0.25, 2.0];
+        let m = vec![0.1f32, 0.0, 0.0, -0.2];
+        let v = vec![0.01f32, 0.0, 0.0, 0.04];
+        save(&path, &params, &m, &v, 7, GradMode::SparseLazy).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.grad_mode, GradMode::SparseLazy);
+        assert_eq!(ck.adam_m, m);
+        assert_eq!(ck.adam_v, v);
+        assert_eq!(ck.adam_t, 7);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn v1_checkpoints_still_load_as_dense() {
+        let dir = std::env::temp_dir().join(format!("kgscale-ckpt-v1-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.ckpt");
+        // Hand-build a v1 file: no grad_mode field after the version.
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // param_count
+        bytes.extend_from_slice(&5u64.to_le_bytes()); // adam_t
+        for x in [1.0f32, 2.0, 0.1, 0.2, 0.01, 0.02] {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.grad_mode, GradMode::Dense);
+        assert_eq!(ck.params, vec![1.0, 2.0]);
+        assert_eq!(ck.adam_t, 5);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

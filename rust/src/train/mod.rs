@@ -4,16 +4,19 @@
 //! Cluster simulation: compute is measured, communication is modeled
 //! ([`netsim`]) — see DESIGN.md "Substitutions". [`allreduce`] carries a
 //! faithful chunked ring implementation used as the correctness oracle
-//! and for bandwidth benches; [`plan`] sizes the AOT buckets; and
-//! [`trainer`] is Algorithm 1.
+//! and for bandwidth benches; [`plan`] sizes the AOT buckets; [`sparse`]
+//! is the row-sparse gradient representation behind the `sparse` /
+//! `sparse_lazy` gradient modes; and [`trainer`] is Algorithm 1.
 
 pub mod allreduce;
 pub mod checkpoint;
 pub mod netsim;
 pub mod optimizer;
 pub mod plan;
+pub mod sparse;
 pub mod trainer;
 
 pub use netsim::{NetworkModel, VirtualClock};
 pub use optimizer::Adam;
+pub use sparse::SparseGrad;
 pub use trainer::Trainer;

@@ -78,11 +78,31 @@ impl NetworkModel {
         hop_secs(self.latency_s, bytes as f64, self.cross_bw)
     }
 
-    /// Sync cost per step for the configured algorithm.
+    /// Sparse gradient exchange (DGL-KE style): touched rows differ per
+    /// worker, so gradients are ring *all-gathered* (p−1 steps moving
+    /// `bytes/p` per link for `bytes` total gathered payload) and summed
+    /// locally. `bytes` is the union sparse gradient size — touched rows
+    /// × (dim × 4 + 4 index bytes) + the dense tail — so per-step wire
+    /// cost scales with the batch's compute graph, not param_count.
+    pub fn sparse_allgather_secs(&self, bytes: usize, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let slowest_bw =
+            if p > self.trainers_per_node { self.cross_bw } else { self.local_bw };
+        let chunk = bytes as f64 / p as f64;
+        (p - 1) as f64 * hop_secs(self.latency_s, chunk, slowest_bw)
+    }
+
+    /// Sync cost per step for the configured algorithm. For
+    /// `GradSync::Sparse` the caller passes the sparse transfer size
+    /// (`SparseGrad::transfer_bytes`); the other algorithms take the
+    /// dense `param_count * 4`.
     pub fn sync_secs(&self, algo: crate::config::GradSync, bytes: usize, p: usize) -> f64 {
         match algo {
             crate::config::GradSync::Ring => self.ring_allreduce_secs(bytes, p),
             crate::config::GradSync::ParamServer => self.param_server_secs(bytes, p),
+            crate::config::GradSync::Sparse => self.sparse_allgather_secs(bytes, p),
             crate::config::GradSync::None => 0.0,
         }
     }
@@ -179,6 +199,26 @@ mod tests {
             m.sync_secs(GradSync::ParamServer, 1 << 20, 8)
                 > m.sync_secs(GradSync::Ring, 1 << 20, 8)
         );
+    }
+
+    #[test]
+    fn sparse_sync_scales_with_touched_bytes_not_params() {
+        let m = model();
+        let p = 4;
+        let dense_bytes = 1_000_000 * 16 * 4; // 1M rows × dim 16
+        // A batch-scale touched set: 2k rows × (16 floats + index) + 1 KB tail.
+        let sparse_bytes = 2_000 * (16 * 4 + 4) + 1024;
+        let dense = m.ring_allreduce_secs(dense_bytes, p);
+        let sparse = m.sync_secs(GradSync::Sparse, sparse_bytes, p);
+        assert!(
+            sparse < dense / 50.0,
+            "sparse sync should be orders cheaper: {sparse:.6}s vs {dense:.6}s"
+        );
+        // Same bytes: all-gather (one phase) beats allreduce (two phases).
+        assert!(
+            m.sparse_allgather_secs(sparse_bytes, p) < m.ring_allreduce_secs(sparse_bytes, p)
+        );
+        assert_eq!(m.sparse_allgather_secs(sparse_bytes, 1), 0.0);
     }
 
     #[test]

@@ -4,6 +4,27 @@
 //! gradients), runs once per synchronous step on the globally-averaged
 //! gradient, and is fully deterministic. Standard Adam (Kingma & Ba)
 //! with bias correction.
+//!
+//! # Gradient-mode semantics (see also `train::trainer`)
+//!
+//! - **dense** (`Adam::step`): the reference path. Every parameter gets a
+//!   moment update each step, even where the gradient is zero (moments
+//!   decay, so stale momentum still nudges untouched rows).
+//! - **sparse** accumulation + dense Adam: the trainer accumulates
+//!   row-sparsely and scatters into a zeroed dense vector before calling
+//!   `Adam::step` — *bit-identical* to dense, because untouched rows have
+//!   exactly-zero gradients either way.
+//! - **sparse_lazy** (`Adam::step_lazy`): DGL-KE-style lazy Adam. Moments
+//!   and parameters are updated *only* for touched embedding rows (plus
+//!   the whole dense remainder). This deviates from dense Adam: untouched
+//!   rows receive neither moment decay nor stale-momentum updates, and
+//!   the bias correction uses the global step count `t` for all rows (as
+//!   in TF LazyAdam / DGL-KE). Loss trajectories track the dense path
+//!   closely but are not bit-equivalent.
+//! - SGD has no moments, so `Sgd::step_sparse` *is* bit-identical to
+//!   `Sgd::step` on row-sparse gradients.
+
+use crate::train::sparse::SparseGrad;
 
 #[derive(Clone, Debug)]
 pub struct Adam {
@@ -54,6 +75,37 @@ impl Adam {
         }
     }
 
+    /// Lazy (row-sparse) update: advances `t`, then updates moments and
+    /// parameters only at the gradient's touched embedding rows and its
+    /// dense remainder — O(touched·dim + tail) instead of O(param_count).
+    /// See the module docs for the documented deviation from dense Adam.
+    pub fn step_lazy(&mut self, params: &mut [f32], grads: &SparseGrad) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.param_count(), self.m.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let lr_t = self.lr * bc2.sqrt() / bc1;
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        let mut update = |i: usize, g: f32, params: &mut [f32]| {
+            let m = b1 * self.m[i] + (1.0 - b1) * g;
+            let v = b2 * self.v[i] + (1.0 - b2) * g * g;
+            self.m[i] = m;
+            self.v[i] = v;
+            params[i] -= lr_t * m / (v.sqrt() + eps);
+        };
+        let seg = grads.segment();
+        for (si, &row) in grads.touched().iter().enumerate() {
+            let base = seg.offset + row as usize * seg.dim;
+            for (d, &g) in grads.row(si).iter().enumerate() {
+                update(base + d, g, params);
+            }
+        }
+        for (di, &g) in grads.dense().iter().enumerate() {
+            update(grads.dense_param_index(di), g, params);
+        }
+    }
+
     pub fn steps_taken(&self) -> u64 {
         self.t
     }
@@ -89,6 +141,23 @@ impl Sgd {
     pub fn step(&self, params: &mut [f32], grads: &[f32]) {
         for (p, g) in params.iter_mut().zip(grads) {
             *p -= self.lr * g;
+        }
+    }
+
+    /// Row-sparse step. SGD is stateless, so skipping zero-gradient rows
+    /// changes nothing: bit-identical to [`step`](Self::step) on the
+    /// scattered dense gradient.
+    pub fn step_sparse(&self, params: &mut [f32], grads: &SparseGrad) {
+        assert_eq!(params.len(), grads.param_count());
+        let seg = grads.segment();
+        for (si, &row) in grads.touched().iter().enumerate() {
+            let base = seg.offset + row as usize * seg.dim;
+            for (d, &g) in grads.row(si).iter().enumerate() {
+                params[base + d] -= self.lr * g;
+            }
+        }
+        for (di, &g) in grads.dense().iter().enumerate() {
+            params[grads.dense_param_index(di)] -= self.lr * g;
         }
     }
 }
@@ -154,5 +223,102 @@ mod tests {
         let mut p = vec![1.0f32, 2.0];
         sgd.step(&mut p, &[1.0, -2.0]);
         assert_eq!(p, vec![0.5, 3.0]);
+    }
+
+    use crate::model::EmbeddingSegment;
+    use crate::train::sparse::SparseGrad;
+
+    /// 5 embedding rows × 2 dims at offset 0, then a 3-float tail.
+    fn sparse_fixture(touched: &[u32], salt: f32) -> (SparseGrad, Vec<f32>, usize) {
+        let seg = EmbeddingSegment { offset: 0, rows: 5, dim: 2 };
+        let pc = 10 + 3;
+        let mut flat = vec![0.0f32; pc];
+        for &r in touched {
+            flat[r as usize * 2] = salt + r as f32;
+            flat[r as usize * 2 + 1] = -salt * 0.5;
+        }
+        for i in 10..13 {
+            flat[i] = salt * 0.25 * (i as f32 - 9.0);
+        }
+        let mut sg = SparseGrad::new(Some(seg), pc);
+        sg.accumulate(touched, &flat);
+        (sg, flat, pc)
+    }
+
+    /// Sparse SGD must be bit-identical to dense SGD on the same
+    /// row-sparse gradient.
+    #[test]
+    fn sparse_sgd_bit_identical_to_dense() {
+        let (sg, flat, pc) = sparse_fixture(&[1, 3], 0.75);
+        let sgd = Sgd { lr: 0.1 };
+        let mut p_dense: Vec<f32> = (0..pc).map(|i| i as f32 * 0.5).collect();
+        let mut p_sparse = p_dense.clone();
+        sgd.step(&mut p_dense, &flat);
+        sgd.step_sparse(&mut p_sparse, &sg);
+        assert_eq!(p_dense, p_sparse);
+    }
+
+    /// Lazy Adam matches dense Adam exactly on touched rows + tail, and
+    /// leaves untouched rows exactly alone (the documented deviation).
+    #[test]
+    fn lazy_adam_touched_rows_match_dense_untouched_frozen() {
+        let (sg, flat, pc) = sparse_fixture(&[0, 4], 1.5);
+        let mut dense = Adam::new(pc, 0.05, 0.9, 0.999, 1e-8);
+        let mut lazy = dense.clone();
+        let mut p_dense: Vec<f32> = (0..pc).map(|i| 1.0 + i as f32 * 0.25).collect();
+        let mut p_lazy = p_dense.clone();
+        let before = p_lazy.clone();
+        dense.step(&mut p_dense, &flat);
+        lazy.step_lazy(&mut p_lazy, &sg);
+        assert_eq!(lazy.steps_taken(), 1);
+        // Touched rows 0 and 4 (flat indices 0,1,8,9) and tail (10..13)
+        // agree bit-for-bit; first step from zero moments is identical.
+        for i in [0usize, 1, 8, 9, 10, 11, 12] {
+            assert_eq!(p_dense[i], p_lazy[i], "index {i} diverged");
+        }
+        // Untouched rows are frozen under lazy Adam (dense also leaves
+        // them unchanged on step 1 since m = v = 0 for a zero gradient).
+        for i in [2usize, 3, 4, 5, 6, 7] {
+            assert_eq!(p_lazy[i], before[i], "untouched index {i} moved");
+        }
+    }
+
+    /// After warming the moments, dense Adam keeps updating untouched
+    /// rows (momentum decay) while lazy Adam freezes them — the exact
+    /// documented divergence.
+    #[test]
+    fn lazy_adam_diverges_only_where_documented() {
+        let (sg1, flat1, pc) = sparse_fixture(&[2], 1.0);
+        let (sg2, flat2, _) = sparse_fixture(&[4], -2.0);
+        let mut dense = Adam::new(pc, 0.05, 0.9, 0.999, 1e-8);
+        let mut lazy = dense.clone();
+        let mut p_dense = vec![1.0f32; pc];
+        let mut p_lazy = vec![1.0f32; pc];
+        dense.step(&mut p_dense, &flat1);
+        lazy.step_lazy(&mut p_lazy, &sg1);
+        dense.step(&mut p_dense, &flat2);
+        lazy.step_lazy(&mut p_lazy, &sg2);
+        // Step 2 touched row 4 only; dense still moved row 2 via its
+        // decayed momentum, lazy did not.
+        assert_ne!(p_dense[4], p_lazy[4], "dense momentum should move row 2 again");
+        // Tail saw identical nonzero gradients both steps: identical.
+        for i in 10..13 {
+            assert_eq!(p_dense[i], p_lazy[i], "tail index {i} diverged");
+        }
+    }
+
+    /// Lazy Adam still optimizes: quadratic convergence through the
+    /// sparse path.
+    #[test]
+    fn lazy_adam_minimizes_quadratic_on_touched_row() {
+        let seg = EmbeddingSegment { offset: 0, rows: 1, dim: 1 };
+        let mut adam = Adam::new(1, 0.1, 0.9, 0.999, 1e-8);
+        let mut params = vec![3.0f32];
+        for _ in 0..200 {
+            let mut sg = SparseGrad::new(Some(seg), 1);
+            sg.accumulate(&[0], &[2.0 * params[0]]);
+            adam.step_lazy(&mut params, &sg);
+        }
+        assert!(params[0].abs() < 0.05, "did not converge: {}", params[0]);
     }
 }

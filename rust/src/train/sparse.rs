@@ -1,0 +1,311 @@
+//! Row-sparse gradient accumulation (DGL-KE-style, Zheng et al. 2020).
+//!
+//! An edge mini-batch's compute graph touches only the `ent_emb` rows in
+//! its `nodes_global` set; the gradient of every other embedding row is
+//! exactly zero (the gather's backward is a scatter-add that never
+//! reaches them). [`SparseGrad`] exploits this: it stores the touched
+//! rows plus the small dense non-embedding remainder, so per-step
+//! accumulate/zero/optimizer cost is O(touched·dim + tail) instead of
+//! O(param_count), and gradient sync can be charged on the bytes that
+//! actually move (`NetworkModel::sparse_allgather_secs`).
+//!
+//! Accumulation order is preserved per element (workers add in the same
+//! sequence the dense path would), so `scatter_into` a zeroed dense
+//! vector reproduces the dense accumulator *bit-identically* — the
+//! `sparse` gradient mode relies on this to keep dense-Adam semantics
+//! while skipping the O(param_count) zero + add on the hot path.
+
+use crate::model::EmbeddingSegment;
+
+/// Row-sparse gradient: touched embedding rows + dense remainder.
+///
+/// The dense remainder covers every flat index outside the embedding
+/// segment: `[0, offset)` followed by `[offset + rows·dim, param_count)`.
+/// With no embedding segment (provided-features mode) the whole vector is
+/// remainder and the representation degrades gracefully to dense.
+#[derive(Clone, Debug)]
+pub struct SparseGrad {
+    seg: EmbeddingSegment,
+    param_count: usize,
+    /// Touched global row ids, in first-touch order.
+    rows: Vec<u32>,
+    /// Accumulated row gradients, `rows.len() * seg.dim`, parallel to
+    /// `rows`.
+    row_data: Vec<f32>,
+    /// Dense remainder accumulator (`param_count - seg.len()` floats).
+    dense: Vec<f32>,
+    /// Per embedding row: slot index + 1 into `rows`, 0 = untouched.
+    slot: Vec<u32>,
+}
+
+impl SparseGrad {
+    /// `seg = None` (no trainable embedding table) puts every parameter
+    /// in the dense remainder.
+    pub fn new(seg: Option<EmbeddingSegment>, param_count: usize) -> Self {
+        let seg = seg.unwrap_or(EmbeddingSegment { offset: 0, rows: 0, dim: 0 });
+        assert!(seg.end() <= param_count, "embedding segment exceeds param vector");
+        SparseGrad {
+            seg,
+            param_count,
+            rows: Vec::new(),
+            row_data: Vec::new(),
+            dense: vec![0.0; param_count - seg.len()],
+            slot: vec![0; seg.rows],
+        }
+    }
+
+    pub fn segment(&self) -> EmbeddingSegment {
+        self.seg
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_count
+    }
+
+    /// Touched global row ids (first-touch order).
+    pub fn touched(&self) -> &[u32] {
+        &self.rows
+    }
+
+    pub fn touched_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Accumulated gradient of the i-th touched row.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.row_data[i * self.seg.dim..(i + 1) * self.seg.dim]
+    }
+
+    /// Dense remainder accumulator.
+    pub fn dense(&self) -> &[f32] {
+        &self.dense
+    }
+
+    /// Flat parameter index of remainder element `i` (remainder indices
+    /// skip over the embedding segment).
+    pub fn dense_param_index(&self, i: usize) -> usize {
+        if i < self.seg.offset {
+            i
+        } else {
+            i + self.seg.len()
+        }
+    }
+
+    /// Reset for the next synchronous step. O(touched + tail): only the
+    /// previously-touched slots and the small remainder are cleared — no
+    /// O(param_count) `fill(0.0)`.
+    pub fn clear(&mut self) {
+        for &r in &self.rows {
+            self.slot[r as usize] = 0;
+        }
+        self.rows.clear();
+        self.row_data.clear();
+        self.dense.fill(0.0);
+    }
+
+    /// Accumulate one worker batch's flat gradient readback: adds the
+    /// `nodes_global` embedding rows and the whole dense remainder.
+    /// `flat` must be a full `param_count` gradient whose embedding rows
+    /// outside `nodes_global` are exactly zero (guaranteed by the
+    /// gather/scatter backward; verified by the gradient-path equivalence
+    /// tests).
+    pub fn accumulate(&mut self, nodes_global: &[u32], flat: &[f32]) {
+        assert_eq!(flat.len(), self.param_count, "gradient length mismatch");
+        let dim = self.seg.dim;
+        if dim > 0 {
+            for &g in nodes_global {
+                let gi = g as usize;
+                assert!(gi < self.seg.rows, "node id {gi} outside embedding table");
+                let si = if self.slot[gi] == 0 {
+                    self.rows.push(g);
+                    self.row_data.resize(self.rows.len() * dim, 0.0);
+                    self.slot[gi] = self.rows.len() as u32;
+                    self.rows.len() - 1
+                } else {
+                    (self.slot[gi] - 1) as usize
+                };
+                let src = &flat[self.seg.offset + gi * dim..self.seg.offset + (gi + 1) * dim];
+                for (a, &x) in self.row_data[si * dim..(si + 1) * dim].iter_mut().zip(src) {
+                    *a += x;
+                }
+            }
+        }
+        // Dense remainder: head [0, offset) then tail [end, param_count).
+        let (head, tail) = self.dense.split_at_mut(self.seg.offset);
+        for (a, &x) in head.iter_mut().zip(&flat[..self.seg.offset]) {
+            *a += x;
+        }
+        for (a, &x) in tail.iter_mut().zip(&flat[self.seg.end()..]) {
+            *a += x;
+        }
+    }
+
+    /// Scale every accumulated value (gradient averaging). Elementwise,
+    /// so bit-identical to scaling the dense accumulator.
+    pub fn scale(&mut self, factor: f32) {
+        for x in self.row_data.iter_mut() {
+            *x *= factor;
+        }
+        for x in self.dense.iter_mut() {
+            *x *= factor;
+        }
+    }
+
+    /// Write the accumulated gradient into a dense vector whose entries
+    /// are all zero (untouched embedding rows stay exactly 0.0). Undo
+    /// with [`clear_scatter`](Self::clear_scatter) to keep the target
+    /// reusable without an O(param_count) refill.
+    pub fn scatter_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.param_count);
+        let dim = self.seg.dim;
+        for (i, &r) in self.rows.iter().enumerate() {
+            let o = self.seg.offset + r as usize * dim;
+            out[o..o + dim].copy_from_slice(&self.row_data[i * dim..(i + 1) * dim]);
+        }
+        out[..self.seg.offset].copy_from_slice(&self.dense[..self.seg.offset]);
+        out[self.seg.end()..].copy_from_slice(&self.dense[self.seg.offset..]);
+    }
+
+    /// Zero exactly the entries [`scatter_into`](Self::scatter_into)
+    /// wrote, restoring an all-zero dense vector in O(touched + tail).
+    pub fn clear_scatter(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.param_count);
+        let dim = self.seg.dim;
+        for &r in &self.rows {
+            let o = self.seg.offset + r as usize * dim;
+            out[o..o + dim].fill(0.0);
+        }
+        out[..self.seg.offset].fill(0.0);
+        out[self.seg.end()..].fill(0.0);
+    }
+
+    /// Bytes a worker actually puts on the wire to share this gradient:
+    /// touched rows × dim × 4 (row payload) + 4 per row index + the dense
+    /// remainder — versus `param_count × 4` for a dense sync.
+    pub fn transfer_bytes(&self) -> usize {
+        self.rows.len() * (self.seg.dim * 4 + 4) + self.dense.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(offset: usize, rows: usize, dim: usize) -> EmbeddingSegment {
+        EmbeddingSegment { offset, rows, dim }
+    }
+
+    /// Dense reference accumulator for equivalence checks.
+    fn dense_accumulate(acc: &mut [f32], flat: &[f32]) {
+        for (a, &x) in acc.iter_mut().zip(flat) {
+            *a += x;
+        }
+    }
+
+    /// A flat gradient touching only `touched` rows of a (rows×dim)
+    /// table at `offset`, with a nonzero remainder.
+    fn flat_grad(
+        param_count: usize,
+        s: EmbeddingSegment,
+        touched: &[u32],
+        salt: f32,
+    ) -> Vec<f32> {
+        let mut g = vec![0.0f32; param_count];
+        for &r in touched {
+            for d in 0..s.dim {
+                g[s.offset + r as usize * s.dim + d] =
+                    salt + r as f32 * 0.25 + d as f32 * 0.125;
+            }
+        }
+        for i in 0..s.offset {
+            g[i] = salt * 0.5 + i as f32;
+        }
+        for i in s.end()..param_count {
+            g[i] = -salt + (i - s.end()) as f32 * 0.0625;
+        }
+        g
+    }
+
+    #[test]
+    fn sparse_accumulate_matches_dense_bitwise() {
+        let s = seg(4, 10, 3);
+        let pc = 4 + 30 + 5;
+        let mut sg = SparseGrad::new(Some(s), pc);
+        let mut dense = vec![0.0f32; pc];
+        // Two "workers" with overlapping touched sets, then averaging.
+        let g1 = flat_grad(pc, s, &[2, 7, 3], 1.0);
+        let g2 = flat_grad(pc, s, &[7, 9], -0.375);
+        sg.accumulate(&[2, 7, 3], &g1);
+        sg.accumulate(&[7, 9], &g2);
+        dense_accumulate(&mut dense, &g1);
+        dense_accumulate(&mut dense, &g2);
+        let inv = 1.0f32 / 3.0;
+        sg.scale(inv);
+        for x in dense.iter_mut() {
+            *x *= inv;
+        }
+        let mut out = vec![0.0f32; pc];
+        sg.scatter_into(&mut out);
+        assert_eq!(out, dense, "sparse scatter must be bit-identical to dense path");
+        assert_eq!(sg.touched_rows(), 4); // {2, 7, 3, 9}
+        sg.clear_scatter(&mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn clear_is_complete_and_reusable() {
+        let s = seg(0, 6, 2);
+        let pc = 12 + 3;
+        let mut sg = SparseGrad::new(Some(s), pc);
+        let g = flat_grad(pc, s, &[1, 4], 2.0);
+        sg.accumulate(&[1, 4], &g);
+        assert_eq!(sg.touched_rows(), 2);
+        sg.clear();
+        assert_eq!(sg.touched_rows(), 0);
+        assert!(sg.dense().iter().all(|&x| x == 0.0));
+        // Re-accumulate a different set: old slots must not leak.
+        let g2 = flat_grad(pc, s, &[0, 4], -1.0);
+        sg.accumulate(&[0, 4], &g2);
+        assert_eq!(sg.touched(), &[0, 4]);
+        let mut out = vec![0.0f32; pc];
+        sg.scatter_into(&mut out);
+        let mut dense = vec![0.0f32; pc];
+        dense_accumulate(&mut dense, &g2);
+        assert_eq!(out, dense);
+    }
+
+    #[test]
+    fn no_segment_degrades_to_dense_remainder() {
+        let pc = 9;
+        let mut sg = SparseGrad::new(None, pc);
+        let g: Vec<f32> = (0..pc).map(|i| i as f32).collect();
+        sg.accumulate(&[], &g);
+        assert_eq!(sg.touched_rows(), 0);
+        assert_eq!(sg.dense(), g.as_slice());
+        assert_eq!(sg.dense_param_index(5), 5);
+        assert_eq!(sg.transfer_bytes(), pc * 4);
+    }
+
+    #[test]
+    fn transfer_bytes_counts_rows_indices_and_tail() {
+        let s = seg(0, 100, 8);
+        let pc = 800 + 40;
+        let mut sg = SparseGrad::new(Some(s), pc);
+        let g = flat_grad(pc, s, &[5, 50, 99], 1.0);
+        sg.accumulate(&[5, 50, 99], &g);
+        // 3 rows × (8 floats + 1 index) × 4B + 40-float tail.
+        assert_eq!(sg.transfer_bytes(), 3 * (8 * 4 + 4) + 40 * 4);
+        assert!(sg.transfer_bytes() < pc * 4, "sparse must beat dense bytes");
+    }
+
+    #[test]
+    fn dense_param_index_skips_segment() {
+        let sg = SparseGrad::new(Some(seg(4, 10, 3)), 39);
+        assert_eq!(sg.dense_param_index(0), 0);
+        assert_eq!(sg.dense_param_index(3), 3);
+        // Remainder index 4 is the first tail element, after the 30-float
+        // segment ending at flat index 34.
+        assert_eq!(sg.dense_param_index(4), 34);
+        assert_eq!(sg.dense_param_index(8), 38);
+    }
+}

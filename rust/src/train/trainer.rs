@@ -20,25 +20,48 @@
 //! per-triple losses and its gradient; the trainer divides the summed
 //! gradient by the global triple count. The result is bit-comparable to
 //! a single worker processing the union batch — verified by the
-//! `distributed_equals_single` integration test. Because averaging makes
-//! all replicas identical after every step, the coordinator stores the
-//! replica once and hands the same vector to each logical worker.
+//! `distributed_training_parity` and `gradient_modes_*` integration
+//! tests. Because averaging makes all replicas identical after every
+//! step, the coordinator stores the replica once and hands the same
+//! vector to each logical worker.
+//!
+//! # Gradient modes (`train.grad_mode`)
+//!
+//! A mini-batch's compute graph touches only the `ent_emb` rows in its
+//! `nodes_global` set; every other embedding row has an exactly-zero
+//! gradient. The gradient path exploits this (DGL-KE, Zheng et al. 2020):
+//!
+//! - `dense` (default): the reference path. O(param_count) accumulator
+//!   zero + add + Adam every step, dense sync bytes.
+//! - `sparse`: row-sparse accumulation ([`SparseGrad`]) with *dense*
+//!   Adam over the scattered average — **bit-identical** to `dense`
+//!   (same losses, same parameters), but the per-step zero/accumulate
+//!   cost is O(touched rows) and `grad_sync = "sparse"` may charge sync
+//!   on the bytes that actually move.
+//! - `sparse_lazy`: row-sparse accumulation + lazy Adam — moments and
+//!   parameters update only at touched rows, making the optimizer step
+//!   itself O(touched rows). **Not** bit-equivalent to `dense`
+//!   (untouched rows skip moment decay; see `train::optimizer` docs);
+//!   loss trajectories track the dense path closely.
 
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, GradMode, GradSync};
 use crate::graph::KnowledgeGraph;
 use crate::metrics::{ComponentTimes, EpochRecord, RunHistory};
 use crate::model::{init_params, Manifest};
 use crate::partition;
-use crate::runtime::{literal_scalar_f32, literal_to_f32, HostTensor, Runtime};
+use crate::runtime::{literal_scalar_f32, literal_to_f32_into, HostTensor, Runtime};
 use crate::sampler::batch::EpochBatches;
 use crate::sampler::compute_graph::{ComputeGraph, ComputeGraphBuilder};
 use crate::sampler::negative::{NegativeSampler, Scope};
 use crate::sampler::{PartContext, TrainTriple};
+use crate::train::checkpoint;
 use crate::train::netsim::{NetworkModel, VirtualClock};
 use crate::train::optimizer::Adam;
+use crate::train::sparse::SparseGrad;
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
+use std::path::Path;
 
 /// Reusable padded input buffers (no per-batch allocation on the hot path).
 struct PadScratch {
@@ -142,6 +165,14 @@ struct StepOutput {
     exec_secs: f64,
 }
 
+/// Where a worker batch's gradient readback is accumulated: the dense
+/// reference accumulator, or the row-sparse one keyed off the compute
+/// graph's `nodes_global` set.
+enum GradSink<'a> {
+    Dense(&'a mut Vec<f32>),
+    Sparse(&'a mut SparseGrad),
+}
+
 pub struct Trainer<'rt> {
     pub cfg: ExperimentConfig,
     pub manifest: Manifest,
@@ -150,7 +181,12 @@ pub struct Trainer<'rt> {
     pub params: Vec<f32>,
     opt: Adam,
     net: NetworkModel,
+    /// Dense gradient accumulator (`dense` mode) / all-zero scatter
+    /// target (`sparse` mode). Empty in `sparse_lazy` mode, which never
+    /// materializes a dense gradient.
     grads_accum: Vec<f32>,
+    /// Row-sparse accumulator for the `sparse` / `sparse_lazy` modes.
+    sparse_accum: Option<SparseGrad>,
     grad_scratch: Vec<f32>,
     /// Copy of the dataset's dense features (empty in embedding mode).
     features: Vec<f32>,
@@ -198,7 +234,26 @@ impl<'rt> Trainer<'rt> {
         let params = init_params(&manifest, cfg.train.seed);
         let opt = Adam::from_config(manifest.param_count, &cfg.train);
         let net = NetworkModel::new(&cfg.network);
-        let grads_accum = vec![0f32; manifest.param_count];
+        // `sparse_lazy` never materializes a dense gradient, so skip the
+        // param_count-sized allocation entirely.
+        let grads_accum = match cfg.train.grad_mode {
+            GradMode::SparseLazy => Vec::new(),
+            _ => vec![0f32; manifest.param_count],
+        };
+        let sparse_accum = match cfg.train.grad_mode {
+            GradMode::Dense => None,
+            _ => {
+                let seg = manifest.embedding_segment();
+                if seg.is_none() {
+                    crate::log_warn!(
+                        "grad_mode {} without an ent_emb table (provided-features \
+                         mode): the whole vector is treated as the dense tail",
+                        cfg.train.grad_mode.name()
+                    );
+                }
+                Some(SparseGrad::new(seg, manifest.param_count))
+            }
+        };
         let grad_scratch = Vec::with_capacity(manifest.param_count);
         let (features, feature_dim) = if manifest.mode == "provided" {
             (graph.features.clone(), graph.feature_dim)
@@ -221,6 +276,7 @@ impl<'rt> Trainer<'rt> {
             opt,
             net,
             grads_accum,
+            sparse_accum,
             grad_scratch,
             features,
             feature_dim,
@@ -247,8 +303,6 @@ impl<'rt> Trainer<'rt> {
         let mut clk = VirtualClock::new();
         let mut components = ComponentTimes::new();
         let p = self.workers.len();
-        let graph_entities = self.manifest.entities;
-        let _ = graph_entities;
 
         // Phase 1 (per paper Algorithm 1 line 3): every worker samples
         // its epoch negatives and builds its shuffled batch plan.
@@ -274,14 +328,28 @@ impl<'rt> Trainer<'rt> {
         let steps = plans.iter().map(|b| b.len()).max().unwrap_or(0);
         let mut loss_sum = 0f64;
         let mut count_sum = 0f64;
+        let mut touched_sum = 0f64;
+        let mut sync_bytes_sum = 0f64;
 
         for step in 0..steps {
-            self.grads_accum.fill(0.0);
+            // Reset the step accumulator: O(param_count) only in dense
+            // mode; the sparse modes clear just the previously-touched
+            // rows + the small dense tail.
+            match self.cfg.train.grad_mode {
+                GradMode::Dense => self.grads_accum.fill(0.0),
+                _ => self.sparse_accum.as_mut().expect("sparse accumulator").clear(),
+            }
             let mut step_compute: Vec<f64> = Vec::with_capacity(p);
             let mut step_loss = 0f64;
             let mut step_count = 0f64;
             for wid in 0..p {
                 let Some(batch) = plans[wid].get(step) else { continue };
+                let mut sink = match self.cfg.train.grad_mode {
+                    GradMode::Dense => GradSink::Dense(&mut self.grads_accum),
+                    _ => GradSink::Sparse(
+                        self.sparse_accum.as_mut().expect("sparse accumulator"),
+                    ),
+                };
                 let out = run_worker_batch(
                     &mut self.workers[wid],
                     batch,
@@ -289,7 +357,7 @@ impl<'rt> Trainer<'rt> {
                     &self.manifest,
                     self.runtime,
                     &self.params,
-                    &mut self.grads_accum,
+                    &mut sink,
                     &mut self.grad_scratch,
                     (&self.features, self.feature_dim),
                     epoch,
@@ -300,20 +368,47 @@ impl<'rt> Trainer<'rt> {
                 components.gnn_model.push(out.exec_secs);
                 step_compute.push(out.compute_secs);
             }
-            // Gradient averaging: modeled AllReduce over the full flat
-            // vector + measured optimizer step.
-            let sync_model_secs = self.net.sync_secs(
-                self.cfg.train.grad_sync,
-                self.manifest.param_count * 4,
-                p,
-            );
+            // Gradient averaging: modeled sync + measured optimizer step.
+            // Sparse sync is charged on the bytes that actually move —
+            // the union touched rows + dense tail — instead of the full
+            // param_count * 4.
+            let (sync_bytes, touched) = match &self.sparse_accum {
+                Some(sg) if self.cfg.train.grad_sync == GradSync::Sparse => {
+                    (sg.transfer_bytes(), sg.touched_rows())
+                }
+                Some(sg) => (self.manifest.param_count * 4, sg.touched_rows()),
+                None => (self.manifest.param_count * 4, 0),
+            };
+            touched_sum += touched as f64;
+            sync_bytes_sum += sync_bytes as f64;
+            let sync_model_secs =
+                self.net.sync_secs(self.cfg.train.grad_sync, sync_bytes, p);
             let opt_sw = Stopwatch::new();
             if step_count > 0.0 {
                 let inv = (1.0 / step_count) as f32;
-                for g in self.grads_accum.iter_mut() {
-                    *g *= inv;
+                match self.cfg.train.grad_mode {
+                    GradMode::Dense => {
+                        for g in self.grads_accum.iter_mut() {
+                            *g *= inv;
+                        }
+                        self.opt.step(&mut self.params, &self.grads_accum);
+                    }
+                    GradMode::Sparse => {
+                        // Scatter into the persistent all-zero dense
+                        // vector and run the reference Adam: bit-identical
+                        // to dense mode, O(touched) scatter + unscatter.
+                        let sg = self.sparse_accum.as_mut().expect("sparse accumulator");
+                        sg.scale(inv);
+                        sg.scatter_into(&mut self.grads_accum);
+                        self.opt.step(&mut self.params, &self.grads_accum);
+                        sg.clear_scatter(&mut self.grads_accum);
+                    }
+                    GradMode::SparseLazy => {
+                        let sg = self.sparse_accum.as_mut().expect("sparse accumulator");
+                        sg.scale(inv);
+                        self.opt.step_lazy(&mut self.params, sg);
+                    }
                 }
-                self.opt.step(&mut self.params, &self.grads_accum);
             }
             let opt_secs = opt_sw.elapsed_secs();
             components.sync_step.push(sync_model_secs + opt_secs);
@@ -332,6 +427,8 @@ impl<'rt> Trainer<'rt> {
             avg_gnn_model: components.gnn_model.mean(),
             avg_sync_step: components.sync_step.mean(),
             remote_fetches: total_remote,
+            avg_touched_rows: if steps > 0 { touched_sum / steps as f64 } else { 0.0 },
+            avg_sync_bytes: if steps > 0 { sync_bytes_sum / steps as f64 } else { 0.0 },
         };
         self.history.epochs.push(record.clone());
         Ok(record)
@@ -343,10 +440,43 @@ impl<'rt> Trainer<'rt> {
         let epoch = self.epoch_counter;
         self.history.eval_points.push((t, epoch, mrr));
     }
+
+    /// Save parameters + optimizer state, tagged with the gradient mode
+    /// so lazy-Adam moments are never silently resumed as dense ones.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let (m, v, t) = self.opt.state();
+        checkpoint::save(path, &self.params, m, v, t, self.cfg.train.grad_mode)
+    }
+
+    /// Restore a checkpoint. `dense` and `sparse` states are
+    /// interchangeable (bit-identical paths); a `sparse_lazy` checkpoint
+    /// only resumes under `sparse_lazy`, and vice versa.
+    pub fn restore_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let ck = checkpoint::load(path)?;
+        anyhow::ensure!(
+            ck.params.len() == self.manifest.param_count,
+            "checkpoint has {} params but manifest expects {}",
+            ck.params.len(),
+            self.manifest.param_count
+        );
+        let ck_lazy = ck.grad_mode == GradMode::SparseLazy;
+        let now_lazy = self.cfg.train.grad_mode == GradMode::SparseLazy;
+        anyhow::ensure!(
+            ck_lazy == now_lazy,
+            "checkpoint was written under grad_mode \"{}\" but this trainer runs \
+             \"{}\" — lazy-Adam moments are not interchangeable with dense ones",
+            ck.grad_mode.name(),
+            self.cfg.train.grad_mode.name()
+        );
+        self.params = ck.params;
+        self.opt.restore(ck.adam_m, ck.adam_v, ck.adam_t);
+        Ok(())
+    }
 }
 
 /// Run one worker's batch (with recursive split if the compute graph
-/// exceeds every compiled bucket), accumulating gradients and loss.
+/// exceeds every compiled bucket), accumulating gradients and loss into
+/// `sink`.
 #[allow(clippy::too_many_arguments)]
 fn run_worker_batch(
     w: &mut Worker,
@@ -355,7 +485,7 @@ fn run_worker_batch(
     manifest: &Manifest,
     runtime: &Runtime,
     params: &[f32],
-    grads_accum: &mut [f32],
+    sink: &mut GradSink<'_>,
     grad_scratch: &mut Vec<f32>,
     features: (&[f32], usize),
     epoch: usize,
@@ -385,11 +515,11 @@ fn run_worker_batch(
         );
         let mid = batch.len() / 2;
         let a = run_worker_batch(
-            w, &batch[..mid], cfg, manifest, runtime, params, grads_accum, grad_scratch,
+            w, &batch[..mid], cfg, manifest, runtime, params, sink, grad_scratch,
             features, epoch,
         )?;
         let b = run_worker_batch(
-            w, &batch[mid..], cfg, manifest, runtime, params, grads_accum, grad_scratch,
+            w, &batch[mid..], cfg, manifest, runtime, params, sink, grad_scratch,
             features, epoch,
         )?;
         return Ok(StepOutput {
@@ -431,16 +561,23 @@ fn run_worker_batch(
     let exec_secs = exec_sw.elapsed_secs();
     anyhow::ensure!(outputs.len() == 2, "train_step returned {} outputs", outputs.len());
     let loss_sum = literal_scalar_f32(&outputs[0])? as f64;
-    grad_scratch.clear();
-    *grad_scratch = literal_to_f32(&outputs[1])?;
+    // Readback reuses `grad_scratch`'s allocation (no per-batch Vec).
+    literal_to_f32_into(&outputs[1], grad_scratch)?;
     anyhow::ensure!(
-        grad_scratch.len() == grads_accum.len(),
+        grad_scratch.len() == manifest.param_count,
         "gradient length mismatch: {} vs {}",
         grad_scratch.len(),
-        grads_accum.len()
+        manifest.param_count
     );
-    for (a, g) in grads_accum.iter_mut().zip(grad_scratch.iter()) {
-        *a += g;
+    match sink {
+        GradSink::Dense(acc) => {
+            for (a, g) in acc.iter_mut().zip(grad_scratch.iter()) {
+                *a += g;
+            }
+        }
+        // Only the compute graph's touched rows (+ the dense tail) are
+        // accumulated: O(touched·dim + tail) instead of O(param_count).
+        GradSink::Sparse(sg) => sg.accumulate(&cg.nodes_global, grad_scratch),
     }
     Ok(StepOutput {
         loss_sum,
@@ -450,4 +587,3 @@ fn run_worker_batch(
         exec_secs,
     })
 }
-

@@ -3,7 +3,7 @@
 //! they are skipped (with a loud message) when artifacts are missing so
 //! `cargo test` still works on a fresh checkout.
 
-use kgscale::config::ExperimentConfig;
+use kgscale::config::{ExperimentConfig, GradMode, GradSync};
 use kgscale::eval::{self, FilterIndex};
 use kgscale::graph::generator;
 use kgscale::model::Manifest;
@@ -149,5 +149,97 @@ fn virtual_time_accounts_sync_cost() {
     assert!(
         time_with > time_without + 0.2,
         "ring sync must show up in virtual time: {time_with:.3} vs {time_without:.3}"
+    );
+}
+
+/// Shared harness for the gradient-mode tests: mini-batches + 2 workers
+/// so sparse accumulation, multi-worker ordering, and per-step touched
+/// sets are all exercised (the tiny default `batch_edges = 0` is
+/// full-batch, which would touch every row and make the test vacuous).
+fn run_mode(
+    runtime: &Runtime,
+    manifest: &Manifest,
+    g: &kgscale::graph::KnowledgeGraph,
+    mode: GradMode,
+    sync: GradSync,
+) -> (Vec<f64>, Vec<f32>, f64, f64) {
+    let mut c = ExperimentConfig::tiny();
+    c.train.batch_edges = 64;
+    c.train.num_trainers = 2;
+    c.train.grad_mode = mode;
+    c.train.grad_sync = sync;
+    let mut t = Trainer::new(c, g, runtime, manifest.clone()).unwrap();
+    let mut losses = Vec::new();
+    let (mut touched, mut sync_bytes) = (0.0, 0.0);
+    for _ in 0..6 {
+        let r = t.train_epoch().unwrap();
+        touched = r.avg_touched_rows;
+        sync_bytes = r.avg_sync_bytes;
+        losses.push(r.mean_loss);
+    }
+    (losses, t.params, touched, sync_bytes)
+}
+
+/// The row-sparse gradient path's central claim: `sparse` (row-sparse
+/// accumulation + dense Adam) is *bit-identical* to the `dense`
+/// reference — same losses, same parameters — because rows outside the
+/// batch's compute graph have exactly-zero gradients either way.
+#[test]
+fn gradient_mode_sparse_is_bit_identical_to_dense() {
+    let Some((runtime, manifest)) = artifacts() else { return };
+    let g = generator::generate(&ExperimentConfig::tiny().dataset);
+    let (dl, dp, dt, _) = run_mode(&runtime, &manifest, &g, GradMode::Dense, GradSync::Ring);
+    let (sl, sp, st, _) = run_mode(&runtime, &manifest, &g, GradMode::Sparse, GradSync::Ring);
+    assert_eq!(dl, sl, "sparse-mode losses must match dense bit-for-bit");
+    assert_eq!(dp, sp, "sparse-mode params must match dense bit-for-bit");
+    // Dense mode does not track touched rows; sparse must.
+    assert_eq!(dt, 0.0);
+    assert!(st > 0.0, "sparse mode should report touched rows");
+    assert!(
+        st <= ExperimentConfig::tiny().dataset.entities as f64,
+        "touched rows bounded by the entity table: {st}"
+    );
+}
+
+/// Lazy Adam is documented as *not* bit-equivalent, but its loss
+/// trajectory must track the dense path and still learn.
+#[test]
+fn gradient_mode_lazy_adam_tracks_dense_trajectory() {
+    let Some((runtime, manifest)) = artifacts() else { return };
+    let g = generator::generate(&ExperimentConfig::tiny().dataset);
+    let (dl, _, _, _) = run_mode(&runtime, &manifest, &g, GradMode::Dense, GradSync::Ring);
+    let (ll, _, lt, _) =
+        run_mode(&runtime, &manifest, &g, GradMode::SparseLazy, GradSync::Ring);
+    assert!(lt > 0.0);
+    assert!(
+        ll.last().unwrap() < &(ll[0] * 0.99),
+        "lazy Adam did not learn: {ll:?}"
+    );
+    for (e, (d, l)) in dl.iter().zip(ll.iter()).enumerate() {
+        assert!(
+            (d - l).abs() < 0.08,
+            "epoch {e}: lazy loss {l:.4} far from dense {d:.4} (dense {dl:?}, lazy {ll:?})"
+        );
+    }
+}
+
+/// Under `grad_sync = "sparse"` the reported wire bytes follow the
+/// touched-row accounting exactly: rows × (dim·4 + 4 index bytes) plus
+/// the dense (non-embedding) tail.
+#[test]
+fn sparse_sync_reports_touched_row_bytes() {
+    let Some((runtime, manifest)) = artifacts() else { return };
+    let g = generator::generate(&ExperimentConfig::tiny().dataset);
+    let (_, _, _, ring_bytes) =
+        run_mode(&runtime, &manifest, &g, GradMode::Sparse, GradSync::Ring);
+    assert_eq!(ring_bytes, (manifest.param_count * 4) as f64);
+    let (_, _, touched, sparse_bytes) =
+        run_mode(&runtime, &manifest, &g, GradMode::Sparse, GradSync::Sparse);
+    let seg = manifest.embedding_segment().expect("tiny manifest has ent_emb");
+    let tail = manifest.param_count - seg.rows * seg.dim;
+    let expect = touched * (seg.dim * 4 + 4) as f64 + (tail * 4) as f64;
+    assert!(
+        (sparse_bytes - expect).abs() < 1e-6 * expect.max(1.0),
+        "sparse bytes {sparse_bytes} != touched-row accounting {expect}"
     );
 }
