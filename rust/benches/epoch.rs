@@ -1,0 +1,170 @@
+//! Bench: epoch throughput on the pipelined host data path.
+//!
+//! Part A (always runs): epoch *planning* — per-worker negative
+//! sampling + batch building — sequentially vs fanned out over a
+//! [`HostPool`], the same fan-out `Trainer::train_epoch` uses.
+//! Part B (needs `make artifacts`): full `train_epoch` wall time,
+//! sequential (`host_threads = 0`) vs pipelined prep, with the
+//! prefetch-stall and overlap-efficiency metrics the trainer reports.
+//!
+//! Writes a machine-readable summary to `BENCH_epoch.json` (path
+//! overridable via the `BENCH_EPOCH_JSON` env var) for
+//! `scripts/run_benches.sh`.
+
+use kgscale::config::{ExperimentConfig, PartitionConfig, PartitionStrategy};
+use kgscale::graph::generator;
+use kgscale::model::Manifest;
+use kgscale::partition;
+use kgscale::runtime::Runtime;
+use kgscale::sampler::batch::EpochBatches;
+use kgscale::sampler::negative::{NegativeSampler, Scope};
+use kgscale::sampler::PartContext;
+use kgscale::train::{worker_epoch_seed, HostPool, Trainer};
+use kgscale::util::bench::{bench, BenchResult};
+use kgscale::util::json::Json;
+use kgscale::util::rng::Rng;
+use std::path::Path;
+use std::sync::{mpsc, Arc};
+
+const NEGATIVES: usize = 2;
+const BATCH_EDGES: usize = 64;
+
+/// One worker's epoch plan (the exact work `Trainer::plan_epoch` does
+/// per wid, minus the remote-fetch accounting).
+fn plan_worker(ctx: &PartContext, sampler: &NegativeSampler, wid: usize) -> usize {
+    let mut rng = Rng::seeded(worker_epoch_seed(7, 0, wid));
+    let (negs, _) = sampler.sample_epoch(ctx, NEGATIVES, &mut rng);
+    let ep = EpochBatches::build(ctx, negs, BATCH_EDGES, &mut rng);
+    ep.num_batches()
+}
+
+fn json_result(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(r.name.clone())),
+        ("mean_secs", Json::Num(r.mean_secs)),
+        ("std_secs", Json::Num(r.std_secs)),
+        ("min_secs", Json::Num(r.min_secs)),
+        ("iters", Json::Num(r.iters as f64)),
+    ])
+}
+
+/// Part A: plan-epoch fan-out, no XLA artifacts needed.
+fn bench_planning(results: &mut Vec<Json>) {
+    let cfg = ExperimentConfig::tiny();
+    let g = generator::generate(&cfg.dataset);
+    let pcfg = PartitionConfig {
+        strategy: PartitionStrategy::Hdrf,
+        num_partitions: 4,
+        hops: 2,
+        hdrf_lambda: 1.0,
+    };
+    let parts = partition::partition_graph(&g, &pcfg, cfg.train.seed);
+    let workers: Vec<Arc<(PartContext, NegativeSampler)>> = parts
+        .iter()
+        .map(|part| {
+            let ctx = PartContext::new(part);
+            let sampler = NegativeSampler::new(&ctx, Scope::LocalCore, g.num_entities);
+            Arc::new((ctx, sampler))
+        })
+        .collect();
+
+    println!("== epoch-plan fan-out (tiny, {} partitions) ==", workers.len());
+    let seq = bench("plan-epoch/sequential", 0.5, || {
+        let total: usize =
+            workers.iter().enumerate().map(|(wid, w)| plan_worker(&w.0, &w.1, wid)).sum();
+        std::hint::black_box(total);
+    });
+    results.push(json_result(&seq));
+    for threads in [2usize, 4] {
+        let pool = HostPool::new(threads);
+        let r = bench(&format!("plan-epoch/pool-{threads}"), 0.5, || {
+            let (tx, rx) = mpsc::channel();
+            for (wid, w) in workers.iter().enumerate() {
+                let w = Arc::clone(w);
+                let tx = tx.clone();
+                pool.submit(move || {
+                    tx.send(plan_worker(&w.0, &w.1, wid)).expect("collector alive");
+                });
+            }
+            drop(tx);
+            let total: usize = rx.iter().sum();
+            std::hint::black_box(total);
+        });
+        results.push(json_result(&r));
+    }
+}
+
+/// Part B: full train_epoch, sequential vs pipelined host prep.
+fn bench_train_epoch(results: &mut Vec<Json>) {
+    let dir = Path::new("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP train_epoch bench: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(dir).unwrap();
+    let runtime = Runtime::new(dir).unwrap();
+    let base = ExperimentConfig::tiny();
+    let g = generator::generate(&base.dataset);
+
+    println!("== train_epoch: sequential vs pipelined host prep ==");
+    println!(
+        "{:<22} {:>12} {:>12} {:>12} {:>10}",
+        "config", "wall epoch", "virt epoch", "stall", "overlap"
+    );
+    for threads in [0usize, 2] {
+        let mut c = base.clone();
+        c.train.batch_edges = BATCH_EDGES;
+        c.train.num_trainers = 2;
+        c.train.host_threads = threads;
+        c.train.prefetch_depth = 2;
+        let mut t = Trainer::new(c, &g, &runtime, manifest.clone()).unwrap();
+        // Warm epoch (JIT load, allocator churn) before measuring.
+        t.train_epoch().unwrap();
+        let (mut wall, mut virt, mut stall, mut overlap) = (0.0, 0.0, 0.0, 0.0);
+        let epochs = 3;
+        for _ in 0..epochs {
+            let r = t.train_epoch().unwrap();
+            wall += r.wall_secs;
+            virt += r.virtual_secs;
+            stall += r.prefetch_stall_secs;
+            overlap += r.overlap_efficiency;
+        }
+        let n = epochs as f64;
+        let name = if threads == 0 {
+            "train-epoch/sequential".to_string()
+        } else {
+            format!("train-epoch/pipelined-{threads}")
+        };
+        println!(
+            "{:<22} {:>11.4}s {:>11.4}s {:>11.4}s {:>10.2}",
+            name,
+            wall / n,
+            virt / n,
+            stall / n,
+            overlap / n
+        );
+        results.push(Json::obj(vec![
+            ("name", Json::Str(name)),
+            ("host_threads", Json::Num(threads as f64)),
+            ("wall_epoch_secs", Json::Num(wall / n)),
+            ("virtual_epoch_secs", Json::Num(virt / n)),
+            ("prefetch_stall_secs", Json::Num(stall / n)),
+            ("overlap_efficiency", Json::Num(overlap / n)),
+        ]));
+    }
+}
+
+fn main() {
+    let mut results = Vec::new();
+    bench_planning(&mut results);
+    bench_train_epoch(&mut results);
+    let out = Json::obj(vec![
+        ("bench", Json::Str("epoch".to_string())),
+        ("tier", Json::Str("tiny".to_string())),
+        ("results", Json::Arr(results)),
+    ]);
+    let path =
+        std::env::var("BENCH_EPOCH_JSON").unwrap_or_else(|_| "BENCH_epoch.json".to_string());
+    std::fs::write(&path, out.to_string_pretty()).expect("write bench json");
+    println!("wrote {path}");
+}

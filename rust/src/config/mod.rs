@@ -164,6 +164,15 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Evaluate on validation every k epochs (0 = only at end).
     pub eval_every: usize,
+    /// Host prep threads for the pipelined data path (`train::pipeline`):
+    /// pool threads build compute graphs and fill padded inputs for
+    /// upcoming steps while the coordinator executes XLA. 0 = sequential
+    /// reference path. Results are bit-identical either way.
+    pub host_threads: usize,
+    /// How many steps ahead of execution a worker's batch prep may run
+    /// (bounds buffered batches per worker). Must be >= 1; only takes
+    /// effect with `host_threads > 0`.
+    pub prefetch_depth: usize,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -280,6 +289,8 @@ impl ExperimentConfig {
                 local_negatives: true,
                 seed: 7,
                 eval_every: 0,
+                host_threads: 0,
+                prefetch_depth: 2,
             },
             partition: PartitionConfig {
                 strategy: PartitionStrategy::Hdrf,
@@ -340,6 +351,8 @@ impl ExperimentConfig {
         set_bool(&doc, "train.local_negatives", &mut cfg.train.local_negatives);
         set_u64(&doc, "train.seed", &mut cfg.train.seed);
         set_usize(&doc, "train.eval_every", &mut cfg.train.eval_every);
+        set_usize(&doc, "train.host_threads", &mut cfg.train.host_threads);
+        set_usize(&doc, "train.prefetch_depth", &mut cfg.train.prefetch_depth);
         if let Some(v) = doc.get_str("train.grad_sync") {
             cfg.train.grad_sync = GradSync::from_str(v)?;
         }
@@ -401,6 +414,16 @@ impl ExperimentConfig {
                 "train.grad_sync = \"sparse\" needs a sparse gradient path; set \
                  train.grad_mode = \"sparse\" or \"sparse_lazy\" (dense accumulation \
                  does not track touched rows)"
+            );
+        }
+        if self.train.prefetch_depth == 0 {
+            bail!("train.prefetch_depth must be >= 1 (1 = double buffering)");
+        }
+        if self.train.host_threads > 256 {
+            bail!(
+                "train.host_threads = {} is not a plausible host thread count \
+                 (use 0 for the sequential path)",
+                self.train.host_threads
             );
         }
         Ok(())
@@ -519,6 +542,25 @@ num_partitions = 4
             .to_string();
         assert!(err.contains("grad_mode"), "got: {err}");
         assert!(ExperimentConfig::from_toml_str("[train]\ngrad_mode = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn host_pipeline_keys_parse_and_validate() {
+        let toml = "[train]\nhost_threads = 4\nprefetch_depth = 3\n";
+        let cfg = ExperimentConfig::from_toml_str(toml).unwrap();
+        assert_eq!(cfg.train.host_threads, 4);
+        assert_eq!(cfg.train.prefetch_depth, 3);
+        // Defaults: sequential reference path, double buffering.
+        assert_eq!(ExperimentConfig::tiny().train.host_threads, 0);
+        assert_eq!(ExperimentConfig::tiny().train.prefetch_depth, 2);
+        let err = ExperimentConfig::from_toml_str("[train]\nprefetch_depth = 0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("prefetch_depth"), "got: {err}");
+        let err = ExperimentConfig::from_toml_str("[train]\nhost_threads = 100000\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("host_threads"), "got: {err}");
     }
 
     #[test]

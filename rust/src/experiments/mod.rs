@@ -281,6 +281,8 @@ pub fn fig6(rows: &[Table3Row], dataset: &str) -> (Figure, Table) {
             "#batches/epoch",
             "touched rows/step",
             "sync KB/step",
+            "prefetch stall (s)",
+            "overlap eff",
         ],
     );
     for r in rows {
@@ -294,6 +296,9 @@ pub fn fig6(rows: &[Table3Row], dataset: &str) -> (Figure, Table) {
             // 0 under dense mode, which does not track touched rows.
             format!("{:.0}", last.avg_touched_rows),
             format!("{:.1}", last.avg_sync_bytes / 1024.0),
+            // Both 0 on the sequential (host_threads = 0) path.
+            format!("{:.4}", last.prefetch_stall_secs),
+            format!("{:.2}", last.overlap_efficiency),
         ]);
     }
     (fig, t)

@@ -19,6 +19,10 @@ pub struct ComponentTimes {
     pub gnn_model: Welford,
     /// Gradient sync (modeled) + optimizer step (measured).
     pub sync_step: Welford,
+    /// Wall seconds per step the coordinator spent blocked waiting for
+    /// a prepared batch from the host pipeline (always 0.0 on the
+    /// sequential `host_threads = 0` path).
+    pub prefetch_stall: Welford,
 }
 
 impl ComponentTimes {
@@ -50,9 +54,17 @@ pub struct EpochRecord {
     /// which does not track touched rows.
     pub avg_touched_rows: f64,
     /// Mean gradient bytes a worker puts on the wire per step: the
-    /// sparse transfer size under `grad_sync = "sparse"`, else the dense
+    /// sparse transfer size (touched entity + relation rows + dense
+    /// remainder) under `grad_sync = "sparse"`, else the dense
     /// `param_count * 4`.
     pub avg_sync_bytes: f64,
+    /// Total wall seconds this epoch the coordinator spent blocked
+    /// waiting on the host prep pipeline (0.0 on the sequential path).
+    pub prefetch_stall_secs: f64,
+    /// Share of host prep work hidden behind coordinator execution:
+    /// `(prep_busy - stall) / prep_busy`, clamped to [0, 1]. 0.0 when
+    /// the sequential path ran (no concurrent prep to hide).
+    pub overlap_efficiency: f64,
 }
 
 /// Full run history plus evaluation checkpoints (Figure 7's series).
@@ -109,6 +121,8 @@ mod tests {
                 remote_fetches: 0,
                 avg_touched_rows: 128.0,
                 avg_sync_bytes: 128.0 * 16.0 * 4.0,
+                prefetch_stall_secs: 0.25,
+                overlap_efficiency: 0.9,
             });
         }
         h.eval_points.push((2.0, 0, 0.1));

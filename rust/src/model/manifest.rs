@@ -221,6 +221,19 @@ impl Manifest {
         Some(EmbeddingSegment { offset: p.offset, rows: p.shape[0], dim: p.shape[1] })
     }
 
+    /// Resolve the `rel_dec` (relation-decoder) table, if it is a 2-D
+    /// `[relations, dim]` parameter. The decoder gathers one row per
+    /// triple, so its gradient is row-sparse in the batch's relation ids
+    /// — `train::sparse` exploits this alongside the entity table.
+    /// Returns `None` for manifests whose `rel_dec` is not 2-D.
+    pub fn relation_segment(&self) -> Option<EmbeddingSegment> {
+        let p = self.params.iter().find(|p| p.name == "rel_dec")?;
+        if p.shape.len() != 2 {
+            return None;
+        }
+        Some(EmbeddingSegment { offset: p.offset, rows: p.shape[0], dim: p.shape[1] })
+    }
+
     pub fn param(&self, name: &str) -> Result<&ParamInfo> {
         self.params
             .iter()
@@ -306,6 +319,23 @@ pub(crate) mod tests {
         let provided = SAMPLE.replace("\"name\": \"ent_emb\"", "\"name\": \"w_in\"");
         let m2 = Manifest::parse(&provided).unwrap();
         assert!(m2.embedding_segment().is_none());
+    }
+
+    #[test]
+    fn relation_segment_requires_2d_rel_dec() {
+        // SAMPLE's rel_dec is 1-D (a [8] vector): no row structure to
+        // exploit, so no segment.
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.relation_segment().is_none());
+        // A 2-D [4, 2] rel_dec of the same size resolves.
+        let two_d = SAMPLE.replace(
+            "\"name\": \"rel_dec\", \"shape\": [8]",
+            "\"name\": \"rel_dec\", \"shape\": [4, 2]",
+        );
+        let m2 = Manifest::parse(&two_d).unwrap();
+        let seg = m2.relation_segment().unwrap();
+        assert_eq!(seg, EmbeddingSegment { offset: 144, rows: 4, dim: 2 });
+        assert_eq!(seg.end(), 152);
     }
 
     #[test]

@@ -64,6 +64,19 @@ impl EpochBatches {
     pub fn iter(&self) -> impl Iterator<Item = &[TrainTriple]> {
         self.triples.chunks(self.batch_size)
     }
+
+    /// The `i`-th batch — the same chunk [`iter`](Self::iter) yields at
+    /// position `i` — without cloning storage. The trainer keeps the
+    /// `EpochBatches` alive for the whole epoch and indexes chunks
+    /// directly per step (no per-epoch triple copies).
+    pub fn batch(&self, i: usize) -> Option<&[TrainTriple]> {
+        let start = i * self.batch_size;
+        if start >= self.triples.len() {
+            return None;
+        }
+        let end = (start + self.batch_size).min(self.triples.len());
+        Some(&self.triples[start..end])
+    }
 }
 
 #[cfg(test)]
@@ -110,6 +123,17 @@ mod tests {
         let neg = ep.iter().flatten().filter(|t| t.label == 0.0).count();
         assert_eq!(pos, n_core);
         assert_eq!(neg, n_core);
+    }
+
+    #[test]
+    fn batch_accessor_matches_iter() {
+        let (ep, _) = epoch(2, 64, 2);
+        assert!(ep.num_batches() > 1);
+        for (i, chunk) in ep.iter().enumerate() {
+            assert_eq!(ep.batch(i), Some(chunk));
+        }
+        assert_eq!(ep.batch(ep.num_batches()), None);
+        assert_eq!(ep.batch(ep.num_batches() + 7), None);
     }
 
     #[test]

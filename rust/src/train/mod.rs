@@ -6,17 +6,21 @@
 //! faithful chunked ring implementation used as the correctness oracle
 //! and for bandwidth benches; [`plan`] sizes the AOT buckets; [`sparse`]
 //! is the row-sparse gradient representation behind the `sparse` /
-//! `sparse_lazy` gradient modes; and [`trainer`] is Algorithm 1.
+//! `sparse_lazy` gradient modes; [`pipeline`] is the multi-threaded host
+//! data path that overlaps batch prep with XLA execution; and
+//! [`trainer`] is Algorithm 1.
 
 pub mod allreduce;
 pub mod checkpoint;
 pub mod netsim;
 pub mod optimizer;
+pub mod pipeline;
 pub mod plan;
 pub mod sparse;
 pub mod trainer;
 
 pub use netsim::{NetworkModel, VirtualClock};
 pub use optimizer::Adam;
+pub use pipeline::{worker_epoch_seed, HostPool};
 pub use sparse::SparseGrad;
 pub use trainer::Trainer;

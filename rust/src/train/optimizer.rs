@@ -15,8 +15,9 @@
 //!   `Adam::step` — *bit-identical* to dense, because untouched rows have
 //!   exactly-zero gradients either way.
 //! - **sparse_lazy** (`Adam::step_lazy`): DGL-KE-style lazy Adam. Moments
-//!   and parameters are updated *only* for touched embedding rows (plus
-//!   the whole dense remainder). This deviates from dense Adam: untouched
+//!   and parameters are updated *only* for touched entity-embedding and
+//!   relation-decoder rows (plus the whole dense remainder). This
+//!   deviates from dense Adam: untouched
 //!   rows receive neither moment decay nor stale-momentum updates, and
 //!   the bias correction uses the global step count `t` for all rows (as
 //!   in TF LazyAdam / DGL-KE). Loss trajectories track the dense path
@@ -76,9 +77,10 @@ impl Adam {
     }
 
     /// Lazy (row-sparse) update: advances `t`, then updates moments and
-    /// parameters only at the gradient's touched embedding rows and its
-    /// dense remainder — O(touched·dim + tail) instead of O(param_count).
-    /// See the module docs for the documented deviation from dense Adam.
+    /// parameters only at the gradient's touched entity rows, touched
+    /// relation rows, and its dense remainder — O(touched·dim + tail)
+    /// instead of O(param_count). See the module docs for the documented
+    /// deviation from dense Adam.
     pub fn step_lazy(&mut self, params: &mut [f32], grads: &SparseGrad) {
         assert_eq!(params.len(), self.m.len());
         assert_eq!(grads.param_count(), self.m.len());
@@ -98,6 +100,13 @@ impl Adam {
         for (si, &row) in grads.touched().iter().enumerate() {
             let base = seg.offset + row as usize * seg.dim;
             for (d, &g) in grads.row(si).iter().enumerate() {
+                update(base + d, g, params);
+            }
+        }
+        let rseg = grads.relation_segment();
+        for (si, &row) in grads.touched_rels().iter().enumerate() {
+            let base = rseg.offset + row as usize * rseg.dim;
+            for (d, &g) in grads.rel_row(si).iter().enumerate() {
                 update(base + d, g, params);
             }
         }
@@ -153,6 +162,13 @@ impl Sgd {
         for (si, &row) in grads.touched().iter().enumerate() {
             let base = seg.offset + row as usize * seg.dim;
             for (d, &g) in grads.row(si).iter().enumerate() {
+                params[base + d] -= self.lr * g;
+            }
+        }
+        let rseg = grads.relation_segment();
+        for (si, &row) in grads.touched_rels().iter().enumerate() {
+            let base = rseg.offset + row as usize * rseg.dim;
+            for (d, &g) in grads.rel_row(si).iter().enumerate() {
                 params[base + d] -= self.lr * g;
             }
         }
@@ -304,6 +320,63 @@ mod tests {
         // Tail saw identical nonzero gradients both steps: identical.
         for i in 10..13 {
             assert_eq!(p_dense[i], p_lazy[i], "tail index {i} diverged");
+        }
+    }
+
+    /// 4 entity rows × 2 dims at offset 0, a 2-float dense middle, then
+    /// 3 relation rows × 2 dims at offset 10.
+    fn two_seg_fixture(
+        ent_touched: &[u32],
+        rel_touched: &[i32],
+        salt: f32,
+    ) -> (SparseGrad, Vec<f32>, usize) {
+        let ent = EmbeddingSegment { offset: 0, rows: 4, dim: 2 };
+        let rel = EmbeddingSegment { offset: 10, rows: 3, dim: 2 };
+        let pc = 16;
+        let mut flat = vec![0.0f32; pc];
+        for &r in ent_touched {
+            flat[r as usize * 2] = salt + r as f32;
+            flat[r as usize * 2 + 1] = -salt * 0.5;
+        }
+        for &r in rel_touched {
+            flat[10 + r as usize * 2] = salt * 0.75 - r as f32;
+            flat[10 + r as usize * 2 + 1] = salt * 0.25;
+        }
+        flat[8] = salt;
+        flat[9] = -salt;
+        let mut sg = SparseGrad::with_relations(Some(ent), Some(rel), pc);
+        sg.accumulate_with_rels(ent_touched, rel_touched, &flat);
+        (sg, flat, pc)
+    }
+
+    /// With a relation segment, sparse SGD must still be bit-identical
+    /// to dense SGD, and lazy Adam must update touched relation rows.
+    #[test]
+    fn relation_segment_flows_through_both_sparse_steps() {
+        let (sg, flat, pc) = two_seg_fixture(&[0, 2], &[1, 2, 1], 1.25);
+        let sgd = Sgd { lr: 0.2 };
+        let mut p_dense: Vec<f32> = (0..pc).map(|i| i as f32 * 0.5 - 1.0).collect();
+        let mut p_sparse = p_dense.clone();
+        sgd.step(&mut p_dense, &flat);
+        sgd.step_sparse(&mut p_sparse, &sg);
+        assert_eq!(p_dense, p_sparse);
+
+        let mut dense = Adam::new(pc, 0.05, 0.9, 0.999, 1e-8);
+        let mut lazy = dense.clone();
+        let mut p_dense: Vec<f32> = (0..pc).map(|i| 1.0 + i as f32 * 0.25).collect();
+        let mut p_lazy = p_dense.clone();
+        let before = p_lazy.clone();
+        dense.step(&mut p_dense, &flat);
+        lazy.step_lazy(&mut p_lazy, &sg);
+        // Touched ent rows 0,2 (flat 0,1,4,5), rel rows 1,2 (flat
+        // 12..16), and the dense middle (8,9) agree bit-for-bit on the
+        // first step from zero moments.
+        for i in [0usize, 1, 4, 5, 8, 9, 12, 13, 14, 15] {
+            assert_eq!(p_dense[i], p_lazy[i], "index {i} diverged");
+        }
+        // Untouched ent rows 1,3 and rel row 0 stay frozen under lazy.
+        for i in [2usize, 3, 6, 7, 10, 11] {
+            assert_eq!(p_lazy[i], before[i], "untouched index {i} moved");
         }
     }
 

@@ -1,13 +1,19 @@
 //! Row-sparse gradient accumulation (DGL-KE-style, Zheng et al. 2020).
 //!
 //! An edge mini-batch's compute graph touches only the `ent_emb` rows in
-//! its `nodes_global` set; the gradient of every other embedding row is
-//! exactly zero (the gather's backward is a scatter-add that never
-//! reaches them). [`SparseGrad`] exploits this: it stores the touched
-//! rows plus the small dense non-embedding remainder, so per-step
-//! accumulate/zero/optimizer cost is O(touched·dim + tail) instead of
-//! O(param_count), and gradient sync can be charged on the bytes that
+//! its `nodes_global` set, and the decoder touches only the `rel_dec`
+//! rows gathered by the batch triples' relation ids; the gradient of
+//! every other row of either table is exactly zero (a gather's backward
+//! is a scatter-add that never reaches them). [`SparseGrad`] exploits
+//! this: it stores the touched rows of both tables plus the small dense
+//! remainder (projection/bias/basis weights), so per-step
+//! accumulate/zero/optimizer cost is O(touched·dim + remainder) instead
+//! of O(param_count), and gradient sync can be charged on the bytes that
 //! actually move (`NetworkModel::sparse_allgather_secs`).
+//!
+//! The per-layer relation-coefficient tables stay dense: they are
+//! gathered by *edge* relation ids, which in practice cover most
+//! relations every batch, so row-sparsity buys nothing there.
 //!
 //! Accumulation order is preserved per element (workers add in the same
 //! sequence the dense path would), so `scatter_into` a zeroed dense
@@ -17,63 +23,157 @@
 
 use crate::model::EmbeddingSegment;
 
-/// Row-sparse gradient: touched embedding rows + dense remainder.
-///
-/// The dense remainder covers every flat index outside the embedding
-/// segment: `[0, offset)` followed by `[offset + rows·dim, param_count)`.
-/// With no embedding segment (provided-features mode) the whole vector is
-/// remainder and the representation degrades gracefully to dense.
+/// One row-sparse table's accumulator state.
 #[derive(Clone, Debug)]
-pub struct SparseGrad {
+struct SegAccum {
     seg: EmbeddingSegment,
-    param_count: usize,
-    /// Touched global row ids, in first-touch order.
+    /// Touched row ids, in first-touch order.
     rows: Vec<u32>,
     /// Accumulated row gradients, `rows.len() * seg.dim`, parallel to
     /// `rows`.
     row_data: Vec<f32>,
-    /// Dense remainder accumulator (`param_count - seg.len()` floats).
-    dense: Vec<f32>,
-    /// Per embedding row: slot index + 1 into `rows`, 0 = untouched.
+    /// Per table row: slot index + 1 into `rows`, 0 = untouched.
     slot: Vec<u32>,
+    /// Per table row: last accumulate call that added it. Relation ids
+    /// repeat within a batch (one per triple), and each call must add a
+    /// row's gradient exactly once — this stamp dedups within a call
+    /// without an O(rows) reset between calls.
+    mark: Vec<u64>,
 }
 
-impl SparseGrad {
-    /// `seg = None` (no trainable embedding table) puts every parameter
-    /// in the dense remainder.
-    pub fn new(seg: Option<EmbeddingSegment>, param_count: usize) -> Self {
-        let seg = seg.unwrap_or(EmbeddingSegment { offset: 0, rows: 0, dim: 0 });
-        assert!(seg.end() <= param_count, "embedding segment exceeds param vector");
-        SparseGrad {
+impl SegAccum {
+    fn new(seg: EmbeddingSegment) -> SegAccum {
+        SegAccum {
             seg,
-            param_count,
             rows: Vec::new(),
             row_data: Vec::new(),
-            dense: vec![0.0; param_count - seg.len()],
             slot: vec![0; seg.rows],
+            mark: vec![0; seg.rows],
         }
     }
 
+    /// O(touched): only previously-touched slots are reset.
+    fn clear(&mut self) {
+        for &r in &self.rows {
+            self.slot[r as usize] = 0;
+        }
+        self.rows.clear();
+        self.row_data.clear();
+    }
+
+    /// Add `flat`'s row `r` (read at the segment's offset) into this
+    /// row's accumulator slot, allocating the slot on first touch.
+    fn add_row(&mut self, r: u32, flat: &[f32]) {
+        let dim = self.seg.dim;
+        let ri = r as usize;
+        assert!(ri < self.seg.rows, "row id {ri} outside table of {} rows", self.seg.rows);
+        let si = if self.slot[ri] == 0 {
+            self.rows.push(r);
+            self.row_data.resize(self.rows.len() * dim, 0.0);
+            self.slot[ri] = self.rows.len() as u32;
+            self.rows.len() - 1
+        } else {
+            (self.slot[ri] - 1) as usize
+        };
+        let src = &flat[self.seg.offset + ri * dim..self.seg.offset + (ri + 1) * dim];
+        for (a, &x) in self.row_data[si * dim..(si + 1) * dim].iter_mut().zip(src) {
+            *a += x;
+        }
+    }
+}
+
+/// Row-sparse gradient: touched entity + relation rows, plus the dense
+/// remainder.
+///
+/// The dense remainder covers every flat index outside the two segments,
+/// in layout order: `[0, ent.offset)`, then `[ent.end, rel.offset)`,
+/// then `[rel.end, param_count)`. An absent segment is represented empty
+/// (the entity table at offset 0, the relation table at `param_count`),
+/// so with neither segment the whole vector is remainder and the
+/// representation degrades gracefully to dense.
+#[derive(Clone, Debug)]
+pub struct SparseGrad {
+    ent: SegAccum,
+    rel: SegAccum,
+    param_count: usize,
+    /// Dense remainder accumulator (`param_count - ent.len - rel.len`).
+    dense: Vec<f32>,
+    /// Monotonic accumulate-call counter driving `SegAccum::mark`.
+    calls: u64,
+}
+
+impl SparseGrad {
+    /// Entity-table-only sparsity: `seg = None` (no trainable embedding
+    /// table) puts every parameter in the dense remainder.
+    pub fn new(seg: Option<EmbeddingSegment>, param_count: usize) -> Self {
+        Self::with_relations(seg, None, param_count)
+    }
+
+    /// Row-sparsity over both the entity table and the relation-decoder
+    /// table. Segments must not overlap and the entity table must come
+    /// first in the flat layout (as `model::params` lays them out);
+    /// either may be `None`.
+    pub fn with_relations(
+        ent: Option<EmbeddingSegment>,
+        rel: Option<EmbeddingSegment>,
+        param_count: usize,
+    ) -> Self {
+        let ent = ent.unwrap_or(EmbeddingSegment { offset: 0, rows: 0, dim: 0 });
+        // An absent relation segment sits empty at the end of the vector
+        // so the three-piece remainder math needs no special cases.
+        let rel = rel.unwrap_or(EmbeddingSegment { offset: param_count, rows: 0, dim: 0 });
+        assert!(ent.end() <= param_count, "embedding segment exceeds param vector");
+        assert!(rel.end() <= param_count, "relation segment exceeds param vector");
+        assert!(ent.end() <= rel.offset, "segments must be ordered ent before rel");
+        SparseGrad {
+            ent: SegAccum::new(ent),
+            rel: SegAccum::new(rel),
+            param_count,
+            dense: vec![0.0; param_count - ent.len() - rel.len()],
+            calls: 0,
+        }
+    }
+
+    /// The entity-embedding segment (empty if absent).
     pub fn segment(&self) -> EmbeddingSegment {
-        self.seg
+        self.ent.seg
+    }
+
+    /// The relation-decoder segment (empty if absent).
+    pub fn relation_segment(&self) -> EmbeddingSegment {
+        self.rel.seg
     }
 
     pub fn param_count(&self) -> usize {
         self.param_count
     }
 
-    /// Touched global row ids (first-touch order).
+    /// Touched entity row ids (first-touch order).
     pub fn touched(&self) -> &[u32] {
-        &self.rows
+        &self.ent.rows
     }
 
     pub fn touched_rows(&self) -> usize {
-        self.rows.len()
+        self.ent.rows.len()
     }
 
-    /// Accumulated gradient of the i-th touched row.
+    /// Accumulated gradient of the i-th touched entity row.
     pub fn row(&self, i: usize) -> &[f32] {
-        &self.row_data[i * self.seg.dim..(i + 1) * self.seg.dim]
+        &self.ent.row_data[i * self.ent.seg.dim..(i + 1) * self.ent.seg.dim]
+    }
+
+    /// Touched relation row ids (first-touch order).
+    pub fn touched_rels(&self) -> &[u32] {
+        &self.rel.rows
+    }
+
+    pub fn touched_rel_rows(&self) -> usize {
+        self.rel.rows.len()
+    }
+
+    /// Accumulated gradient of the i-th touched relation row.
+    pub fn rel_row(&self, i: usize) -> &[f32] {
+        &self.rel.row_data[i * self.rel.seg.dim..(i + 1) * self.rel.seg.dim]
     }
 
     /// Dense remainder accumulator.
@@ -82,60 +182,79 @@ impl SparseGrad {
     }
 
     /// Flat parameter index of remainder element `i` (remainder indices
-    /// skip over the embedding segment).
+    /// skip over both segments).
     pub fn dense_param_index(&self, i: usize) -> usize {
-        if i < self.seg.offset {
+        let head = self.ent.seg.offset;
+        let mid_end = head + (self.rel.seg.offset - self.ent.seg.end());
+        if i < head {
             i
+        } else if i < mid_end {
+            i + self.ent.seg.len()
         } else {
-            i + self.seg.len()
+            i + self.ent.seg.len() + self.rel.seg.len()
         }
     }
 
-    /// Reset for the next synchronous step. O(touched + tail): only the
-    /// previously-touched slots and the small remainder are cleared — no
-    /// O(param_count) `fill(0.0)`.
+    /// Reset for the next synchronous step. O(touched + remainder): only
+    /// the previously-touched slots and the small remainder are cleared
+    /// — no O(param_count) `fill(0.0)`.
     pub fn clear(&mut self) {
-        for &r in &self.rows {
-            self.slot[r as usize] = 0;
-        }
-        self.rows.clear();
-        self.row_data.clear();
+        self.ent.clear();
+        self.rel.clear();
         self.dense.fill(0.0);
     }
 
-    /// Accumulate one worker batch's flat gradient readback: adds the
-    /// `nodes_global` embedding rows and the whole dense remainder.
-    /// `flat` must be a full `param_count` gradient whose embedding rows
-    /// outside `nodes_global` are exactly zero (guaranteed by the
-    /// gather/scatter backward; verified by the gradient-path equivalence
-    /// tests).
+    /// Entity-only accumulation (back-compat path for callers without
+    /// relation ids). Refuses to run with a relation segment configured:
+    /// the relation rows' gradients would be silently dropped.
     pub fn accumulate(&mut self, nodes_global: &[u32], flat: &[f32]) {
+        assert!(
+            self.rel.seg.is_empty(),
+            "relation-sparse accumulator requires accumulate_with_rels"
+        );
+        self.accumulate_with_rels(nodes_global, &[], flat);
+    }
+
+    /// Accumulate one worker batch's flat gradient readback: adds the
+    /// `nodes_global` entity rows, the (deduplicated) `rels` relation
+    /// rows, and the dense remainder. `flat` must be a full
+    /// `param_count` gradient whose segment rows outside the touched
+    /// sets are exactly zero (guaranteed by the gather/scatter backward;
+    /// verified by the gradient-path equivalence tests). `nodes_global`
+    /// is distinct by construction; `rels` may repeat (one id per
+    /// triple) — each distinct row is added exactly once per call, which
+    /// is what the dense elementwise add does.
+    pub fn accumulate_with_rels(&mut self, nodes_global: &[u32], rels: &[i32], flat: &[f32]) {
         assert_eq!(flat.len(), self.param_count, "gradient length mismatch");
-        let dim = self.seg.dim;
-        if dim > 0 {
+        self.calls += 1;
+        if self.ent.seg.dim > 0 {
             for &g in nodes_global {
-                let gi = g as usize;
-                assert!(gi < self.seg.rows, "node id {gi} outside embedding table");
-                let si = if self.slot[gi] == 0 {
-                    self.rows.push(g);
-                    self.row_data.resize(self.rows.len() * dim, 0.0);
-                    self.slot[gi] = self.rows.len() as u32;
-                    self.rows.len() - 1
-                } else {
-                    (self.slot[gi] - 1) as usize
-                };
-                let src = &flat[self.seg.offset + gi * dim..self.seg.offset + (gi + 1) * dim];
-                for (a, &x) in self.row_data[si * dim..(si + 1) * dim].iter_mut().zip(src) {
-                    *a += x;
-                }
+                self.ent.add_row(g, flat);
             }
         }
-        // Dense remainder: head [0, offset) then tail [end, param_count).
-        let (head, tail) = self.dense.split_at_mut(self.seg.offset);
-        for (a, &x) in head.iter_mut().zip(&flat[..self.seg.offset]) {
+        if self.rel.seg.dim > 0 {
+            for &r in rels {
+                let ri = r as usize; // relation ids are non-negative
+                if self.rel.mark[ri] == self.calls {
+                    continue;
+                }
+                self.rel.mark[ri] = self.calls;
+                self.rel.add_row(r as u32, flat);
+            }
+        }
+        // Dense remainder: three pieces around the two segments.
+        let head = self.ent.seg.offset;
+        let mid = self.rel.seg.offset - self.ent.seg.end();
+        for (a, &x) in self.dense[..head].iter_mut().zip(&flat[..head]) {
             *a += x;
         }
-        for (a, &x) in tail.iter_mut().zip(&flat[self.seg.end()..]) {
+        for (a, &x) in self.dense[head..head + mid]
+            .iter_mut()
+            .zip(&flat[self.ent.seg.end()..self.rel.seg.offset])
+        {
+            *a += x;
+        }
+        for (a, &x) in self.dense[head + mid..].iter_mut().zip(&flat[self.rel.seg.end()..]) {
             *a += x;
         }
     }
@@ -143,7 +262,10 @@ impl SparseGrad {
     /// Scale every accumulated value (gradient averaging). Elementwise,
     /// so bit-identical to scaling the dense accumulator.
     pub fn scale(&mut self, factor: f32) {
-        for x in self.row_data.iter_mut() {
+        for x in self.ent.row_data.iter_mut() {
+            *x *= factor;
+        }
+        for x in self.rel.row_data.iter_mut() {
             *x *= factor;
         }
         for x in self.dense.iter_mut() {
@@ -152,38 +274,51 @@ impl SparseGrad {
     }
 
     /// Write the accumulated gradient into a dense vector whose entries
-    /// are all zero (untouched embedding rows stay exactly 0.0). Undo
+    /// are all zero (untouched segment rows stay exactly 0.0). Undo
     /// with [`clear_scatter`](Self::clear_scatter) to keep the target
     /// reusable without an O(param_count) refill.
     pub fn scatter_into(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.param_count);
-        let dim = self.seg.dim;
-        for (i, &r) in self.rows.iter().enumerate() {
-            let o = self.seg.offset + r as usize * dim;
-            out[o..o + dim].copy_from_slice(&self.row_data[i * dim..(i + 1) * dim]);
+        for sa in [&self.ent, &self.rel] {
+            let dim = sa.seg.dim;
+            for (i, &r) in sa.rows.iter().enumerate() {
+                let o = sa.seg.offset + r as usize * dim;
+                out[o..o + dim].copy_from_slice(&sa.row_data[i * dim..(i + 1) * dim]);
+            }
         }
-        out[..self.seg.offset].copy_from_slice(&self.dense[..self.seg.offset]);
-        out[self.seg.end()..].copy_from_slice(&self.dense[self.seg.offset..]);
+        let head = self.ent.seg.offset;
+        let mid = self.rel.seg.offset - self.ent.seg.end();
+        out[..head].copy_from_slice(&self.dense[..head]);
+        out[self.ent.seg.end()..self.rel.seg.offset]
+            .copy_from_slice(&self.dense[head..head + mid]);
+        out[self.rel.seg.end()..].copy_from_slice(&self.dense[head + mid..]);
     }
 
     /// Zero exactly the entries [`scatter_into`](Self::scatter_into)
-    /// wrote, restoring an all-zero dense vector in O(touched + tail).
+    /// wrote, restoring an all-zero dense vector in O(touched +
+    /// remainder).
     pub fn clear_scatter(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.param_count);
-        let dim = self.seg.dim;
-        for &r in &self.rows {
-            let o = self.seg.offset + r as usize * dim;
-            out[o..o + dim].fill(0.0);
+        for sa in [&self.ent, &self.rel] {
+            let dim = sa.seg.dim;
+            for &r in &sa.rows {
+                let o = sa.seg.offset + r as usize * dim;
+                out[o..o + dim].fill(0.0);
+            }
         }
-        out[..self.seg.offset].fill(0.0);
-        out[self.seg.end()..].fill(0.0);
+        out[..self.ent.seg.offset].fill(0.0);
+        out[self.ent.seg.end()..self.rel.seg.offset].fill(0.0);
+        out[self.rel.seg.end()..].fill(0.0);
     }
 
     /// Bytes a worker actually puts on the wire to share this gradient:
-    /// touched rows × dim × 4 (row payload) + 4 per row index + the dense
-    /// remainder — versus `param_count × 4` for a dense sync.
+    /// touched rows × dim × 4 (row payload) + 4 per row index, for both
+    /// tables, + the dense remainder — versus `param_count × 4` for a
+    /// dense sync.
     pub fn transfer_bytes(&self) -> usize {
-        self.rows.len() * (self.seg.dim * 4 + 4) + self.dense.len() * 4
+        self.ent.rows.len() * (self.ent.seg.dim * 4 + 4)
+            + self.rel.rows.len() * (self.rel.seg.dim * 4 + 4)
+            + self.dense.len() * 4
     }
 }
 
@@ -204,17 +339,11 @@ mod tests {
 
     /// A flat gradient touching only `touched` rows of a (rows×dim)
     /// table at `offset`, with a nonzero remainder.
-    fn flat_grad(
-        param_count: usize,
-        s: EmbeddingSegment,
-        touched: &[u32],
-        salt: f32,
-    ) -> Vec<f32> {
+    fn flat_grad(param_count: usize, s: EmbeddingSegment, touched: &[u32], salt: f32) -> Vec<f32> {
         let mut g = vec![0.0f32; param_count];
         for &r in touched {
             for d in 0..s.dim {
-                g[s.offset + r as usize * s.dim + d] =
-                    salt + r as f32 * 0.25 + d as f32 * 0.125;
+                g[s.offset + r as usize * s.dim + d] = salt + r as f32 * 0.25 + d as f32 * 0.125;
             }
         }
         for i in 0..s.offset {
@@ -307,5 +436,105 @@ mod tests {
         // segment ending at flat index 34.
         assert_eq!(sg.dense_param_index(4), 34);
         assert_eq!(sg.dense_param_index(8), 38);
+    }
+
+    /// A two-segment layout mirroring the real one: ent table first, a
+    /// dense middle (layer weights), the rel table at the end.
+    fn two_seg() -> (EmbeddingSegment, EmbeddingSegment, usize) {
+        let ent = seg(0, 6, 4); // [0, 24)
+        let rel = seg(30, 3, 2); // [30, 36), dense mid = [24, 30)
+        (ent, rel, 36)
+    }
+
+    /// Build a flat gradient for the two-segment layout: entity rows
+    /// from `ent_touched`, relation rows from `rel_touched`, every
+    /// non-segment index nonzero.
+    fn two_seg_grad(ent_touched: &[u32], rel_touched: &[i32], salt: f32) -> Vec<f32> {
+        let (ent, rel, pc) = two_seg();
+        let mut g = vec![0.0f32; pc];
+        for &r in ent_touched {
+            for d in 0..ent.dim {
+                g[ent.offset + r as usize * ent.dim + d] = salt + r as f32 + d as f32 * 0.5;
+            }
+        }
+        for &r in rel_touched {
+            for d in 0..rel.dim {
+                g[rel.offset + r as usize * rel.dim + d] = -salt + r as f32 * 0.25 + d as f32;
+            }
+        }
+        for i in ent.end()..rel.offset {
+            g[i] = salt * 0.125 + i as f32;
+        }
+        g
+    }
+
+    #[test]
+    fn relation_segment_matches_dense_bitwise() {
+        let (ent, rel, pc) = two_seg();
+        let mut sg = SparseGrad::with_relations(Some(ent), Some(rel), pc);
+        let mut dense = vec![0.0f32; pc];
+        // Relation ids repeat within a call (one per triple) — the
+        // accumulator must add each touched rel row exactly once per
+        // call, like the dense elementwise add does.
+        let g1 = two_seg_grad(&[1, 3], &[0, 2], 1.0);
+        let g2 = two_seg_grad(&[3, 5], &[2], -0.5);
+        sg.accumulate_with_rels(&[1, 3], &[0, 2, 0, 2, 2], &g1);
+        sg.accumulate_with_rels(&[3, 5], &[2, 2], &g2);
+        dense_accumulate(&mut dense, &g1);
+        dense_accumulate(&mut dense, &g2);
+        let inv = 0.5f32;
+        sg.scale(inv);
+        for x in dense.iter_mut() {
+            *x *= inv;
+        }
+        let mut out = vec![0.0f32; pc];
+        sg.scatter_into(&mut out);
+        assert_eq!(out, dense, "two-segment scatter must match dense bitwise");
+        assert_eq!(sg.touched(), &[1, 3, 5]);
+        assert_eq!(sg.touched_rels(), &[0, 2]);
+        sg.clear_scatter(&mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+        // clear() resets the rel side too (fresh marks next step).
+        sg.clear();
+        assert_eq!(sg.touched_rel_rows(), 0);
+        sg.accumulate_with_rels(&[0], &[1], &two_seg_grad(&[0], &[1], 2.0));
+        assert_eq!(sg.touched_rels(), &[1]);
+    }
+
+    #[test]
+    fn relation_rows_enter_transfer_bytes() {
+        let (ent, rel, pc) = two_seg();
+        let mut sg = SparseGrad::with_relations(Some(ent), Some(rel), pc);
+        sg.accumulate_with_rels(&[2], &[1, 1], &two_seg_grad(&[2], &[1], 1.0));
+        // 1 ent row (4 floats + idx) + 1 rel row (2 floats + idx) + the
+        // 6-float dense middle.
+        assert_eq!(sg.transfer_bytes(), (4 * 4 + 4) + (2 * 4 + 4) + 6 * 4);
+    }
+
+    #[test]
+    fn dense_param_index_skips_both_segments() {
+        let (ent, rel, pc) = two_seg();
+        let sg = SparseGrad::with_relations(Some(ent), Some(rel), pc);
+        assert_eq!(sg.dense().len(), 6);
+        // The remainder is exactly the dense middle [24, 30).
+        for i in 0..6 {
+            assert_eq!(sg.dense_param_index(i), 24 + i);
+        }
+        // Rel-only layout: head remainder precedes the segment.
+        let sg2 = SparseGrad::with_relations(None, Some(seg(4, 2, 3)), 12);
+        assert_eq!(sg2.dense().len(), 6);
+        assert_eq!(sg2.dense_param_index(0), 0);
+        assert_eq!(sg2.dense_param_index(3), 3);
+        assert_eq!(sg2.dense_param_index(4), 10);
+        assert_eq!(sg2.dense_param_index(5), 11);
+    }
+
+    #[test]
+    #[should_panic(expected = "accumulate_with_rels")]
+    fn entity_only_accumulate_refuses_relation_segment() {
+        let (ent, rel, pc) = two_seg();
+        let mut sg = SparseGrad::with_relations(Some(ent), Some(rel), pc);
+        let g = two_seg_grad(&[0], &[0], 1.0);
+        sg.accumulate(&[0], &g);
     }
 }

@@ -1,20 +1,38 @@
 //! The distributed trainer (paper §3.1/§3.3, Algorithm 1), executed on a
 //! simulated cluster.
 //!
-//! Physical layout: everything runs on the coordinator thread (the xla
-//! wrapper types are not Send and this machine has one core). Logical
-//! layout: `P` workers, each bound to one self-sufficient partition,
-//! advance in *synchronous steps*. Per step each active worker
+//! Physical layout: XLA execution, gradient accumulation, and the
+//! optimizer run on the coordinator thread (the xla wrapper types are
+//! not `Send`, so the PJRT [`Runtime`] stays pinned there). The
+//! host-side batch work — negative sampling, batch planning,
+//! compute-graph extraction, padded-scratch fill — is plain data and
+//! runs either inline (`train.host_threads = 0`, the sequential
+//! reference path) or on a persistent [`HostPool`]
+//! (`train.host_threads > 0`), where prep for steps `s+1..s+depth`
+//! proceeds while the coordinator executes step `s`
+//! ([`train::pipeline`](crate::train::pipeline)).
 //!
-//!   1. extracts its edge mini-batch's compute graph (measured),
+//! Logical layout: `P` workers, each bound to one self-sufficient
+//! partition, advance in *synchronous steps*. Per step each active
+//! worker
+//!
+//!   1. extracts its edge mini-batch's compute graph (measured, host),
 //!   2. executes the AOT `train_step` artifact → (Σ loss, Σ-gradients)
-//!      (measured),
+//!      (measured, coordinator),
 //!
 //! then gradients are combined and one optimizer step is applied. The
 //! virtual cluster clock advances by `max_w(compute_w) + T_sync` where
 //! `T_sync` comes from the α-β network model (ring AllReduce by default)
 //! — i.e. measured compute composed with modeled communication, which is
 //! the documented substitution for the paper's 4×2-GPU cluster.
+//!
+//! **Bit-identity contract:** the pipelined path produces exactly the
+//! losses and parameters of the sequential path. Both go through
+//! [`prepare_batch`] (identical prepared inputs by construction),
+//! per-(epoch, wid) RNG streams are derived by [`worker_epoch_seed`]
+//! independent of scheduling, and the coordinator accumulates gradients
+//! in fixed `wid` order regardless of prep completion order — verified
+//! by the `pipelined_path_bit_identical_to_sequential` e2e test.
 //!
 //! Mathematical equivalence (§2.2): `train_step` returns the *sum* of
 //! per-triple losses and its gradient; the trainer divides the summed
@@ -28,8 +46,9 @@
 //! # Gradient modes (`train.grad_mode`)
 //!
 //! A mini-batch's compute graph touches only the `ent_emb` rows in its
-//! `nodes_global` set; every other embedding row has an exactly-zero
-//! gradient. The gradient path exploits this (DGL-KE, Zheng et al. 2020):
+//! `nodes_global` set and the `rel_dec` rows in its triples' relation
+//! ids; every other row of either table has an exactly-zero gradient.
+//! The gradient path exploits this (DGL-KE, Zheng et al. 2020):
 //!
 //! - `dense` (default): the reference path. O(param_count) accumulator
 //!   zero + add + Adam every step, dense sync bytes.
@@ -51,126 +70,65 @@ use crate::model::{init_params, Manifest};
 use crate::partition;
 use crate::runtime::{literal_scalar_f32, literal_to_f32_into, HostTensor, Runtime};
 use crate::sampler::batch::EpochBatches;
-use crate::sampler::compute_graph::{ComputeGraph, ComputeGraphBuilder};
+use crate::sampler::compute_graph::ComputeGraphBuilder;
 use crate::sampler::negative::{NegativeSampler, Scope};
-use crate::sampler::{PartContext, TrainTriple};
+use crate::sampler::PartContext;
 use crate::train::checkpoint;
 use crate::train::netsim::{NetworkModel, VirtualClock};
 use crate::train::optimizer::Adam;
+use crate::train::pipeline::{
+    prepare_batch, worker_epoch_seed, HostPool, PadScratch, PrepShared, PrepState, PreparedUnit,
+};
 use crate::train::sparse::SparseGrad;
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
+use std::collections::VecDeque;
 use std::path::Path;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
 
-/// Reusable padded input buffers (no per-batch allocation on the hot path).
-struct PadScratch {
-    node_ids: Vec<i32>,
-    node_feat: Vec<f32>,
-    src: Vec<i32>,
-    dst: Vec<i32>,
-    rel: Vec<i32>,
-    emask: Vec<f32>,
-    ts: Vec<i32>,
-    tr: Vec<i32>,
-    tt: Vec<i32>,
-    labels: Vec<f32>,
-    tmask: Vec<f32>,
-}
-
-impl PadScratch {
-    fn new() -> Self {
-        PadScratch {
-            node_ids: Vec::new(),
-            node_feat: Vec::new(),
-            src: Vec::new(),
-            dst: Vec::new(),
-            rel: Vec::new(),
-            emask: Vec::new(),
-            ts: Vec::new(),
-            tr: Vec::new(),
-            tt: Vec::new(),
-            labels: Vec::new(),
-            tmask: Vec::new(),
-        }
-    }
-
-    /// Fill from a compute graph, padding to (n, e, b). `features` is
-    /// the dataset's dense feature matrix (empty in embedding mode).
-    fn fill(
-        &mut self,
-        cg: &ComputeGraph,
-        features: &[f32],
-        feature_dim: usize,
-        n: usize,
-        e: usize,
-        b: usize,
-    ) {
-        assert!(cg.num_nodes() <= n && cg.num_edges() <= e && cg.num_triples() <= b);
-        if feature_dim > 0 {
-            let f = feature_dim;
-            self.node_feat.clear();
-            self.node_feat.resize(n * f, 0.0);
-            for (i, &g) in cg.nodes_global.iter().enumerate() {
-                let gi = g as usize * f;
-                self.node_feat[i * f..(i + 1) * f].copy_from_slice(&features[gi..gi + f]);
-            }
-        } else {
-            self.node_ids.clear();
-            self.node_ids.resize(n, 0);
-            for (i, &g) in cg.nodes_global.iter().enumerate() {
-                self.node_ids[i] = g as i32;
-            }
-        }
-        fill_pad_i32(&mut self.src, &cg.src, e, 0);
-        fill_pad_i32(&mut self.dst, &cg.dst, e, 0);
-        fill_pad_i32(&mut self.rel, &cg.rel, e, 0);
-        fill_pad_f32(&mut self.emask, cg.num_edges(), e);
-        fill_pad_i32(&mut self.ts, &cg.ts, b, 0);
-        fill_pad_i32(&mut self.tr, &cg.tr, b, 0);
-        fill_pad_i32(&mut self.tt, &cg.tt, b, 0);
-        self.labels.clear();
-        self.labels.extend_from_slice(&cg.labels);
-        self.labels.resize(b, 0.0);
-        fill_pad_f32(&mut self.tmask, cg.num_triples(), b);
-    }
-}
-
-fn fill_pad_i32(dst: &mut Vec<i32>, src: &[i32], len: usize, pad: i32) {
-    dst.clear();
-    dst.extend_from_slice(src);
-    dst.resize(len, pad);
-}
-
-fn fill_pad_f32(dst: &mut Vec<f32>, ones: usize, len: usize) {
-    dst.clear();
-    dst.resize(ones, 1.0);
-    dst.resize(len, 0.0);
-}
-
-/// One logical trainer process bound to a partition.
+/// One logical trainer process bound to a partition. `ctx` and `sampler`
+/// are shared with prep jobs via `Arc`; `prep` (builder + recycled
+/// scratch) is owned by exactly one prep job at a time — `None` while a
+/// job is in flight on the pool.
 struct Worker {
-    ctx: PartContext,
-    sampler: NegativeSampler,
-    builder: ComputeGraphBuilder,
-    scratch: PadScratch,
-}
-
-/// Per-step result of one worker's compute phase.
-struct StepOutput {
-    loss_sum: f64,
-    count: f64,
-    compute_secs: f64,
-    cg_secs: f64,
-    exec_secs: f64,
+    ctx: Arc<PartContext>,
+    sampler: Arc<NegativeSampler>,
+    prep: Option<PrepState>,
 }
 
 /// Where a worker batch's gradient readback is accumulated: the dense
 /// reference accumulator, or the row-sparse one keyed off the compute
-/// graph's `nodes_global` set.
+/// graph's touched node/relation sets.
 enum GradSink<'a> {
     Dense(&'a mut Vec<f32>),
     Sparse(&'a mut SparseGrad),
+}
+
+/// What a prep job sends back to the coordinator. The worker's
+/// `PrepState` rides along so it is restored (and the next job can be
+/// submitted) even when preparation failed.
+struct PrepResult {
+    wid: usize,
+    state: PrepState,
+    units: Result<(Vec<PreparedUnit>, f64)>,
+    /// Seconds the job occupied a pool thread (overlap accounting).
+    prep_secs: f64,
+}
+
+/// Per-epoch scalar accumulators threaded through both step paths.
+#[derive(Default)]
+struct EpochStats {
+    loss_sum: f64,
+    count_sum: f64,
+    touched_sum: f64,
+    sync_bytes_sum: f64,
+    /// Coordinator seconds blocked waiting on a prep result.
+    stall_secs: f64,
+    /// Total seconds prep jobs kept pool threads busy.
+    prep_busy_secs: f64,
 }
 
 pub struct Trainer<'rt> {
@@ -188,9 +146,11 @@ pub struct Trainer<'rt> {
     /// Row-sparse accumulator for the `sparse` / `sparse_lazy` modes.
     sparse_accum: Option<SparseGrad>,
     grad_scratch: Vec<f32>,
-    /// Copy of the dataset's dense features (empty in embedding mode).
-    features: Vec<f32>,
-    feature_dim: usize,
+    /// Plain-data inputs shared with prep jobs (manifest copy + the
+    /// dataset's dense feature matrix, empty in embedding mode).
+    shared: Arc<PrepShared>,
+    /// Host prep pool; `None` ⇒ sequential reference path.
+    pool: Option<HostPool>,
     pub history: RunHistory,
     epoch_counter: usize,
 }
@@ -217,10 +177,10 @@ impl<'rt> Trainer<'rt> {
         let workers = parts
             .iter()
             .map(|p| {
-                let ctx = PartContext::new(p);
-                let sampler = NegativeSampler::new(&ctx, scope, graph.num_entities);
+                let ctx = Arc::new(PartContext::new(p));
+                let sampler = Arc::new(NegativeSampler::new(&ctx, scope, graph.num_entities));
                 let builder = ComputeGraphBuilder::new(&ctx);
-                Worker { ctx, sampler, builder, scratch: PadScratch::new() }
+                Worker { ctx, sampler, prep: Some(PrepState { builder, spare: Vec::new() }) }
             })
             .collect();
         if manifest.mode == "provided" {
@@ -243,15 +203,18 @@ impl<'rt> Trainer<'rt> {
         let sparse_accum = match cfg.train.grad_mode {
             GradMode::Dense => None,
             _ => {
-                let seg = manifest.embedding_segment();
-                if seg.is_none() {
+                let ent = manifest.embedding_segment();
+                if ent.is_none() {
                     crate::log_warn!(
                         "grad_mode {} without an ent_emb table (provided-features \
                          mode): the whole vector is treated as the dense tail",
                         cfg.train.grad_mode.name()
                     );
                 }
-                Some(SparseGrad::new(seg, manifest.param_count))
+                let rel = manifest
+                    .relation_segment()
+                    .filter(|r| r.offset >= ent.map_or(0, |e| e.end()));
+                Some(SparseGrad::with_relations(ent, rel, manifest.param_count))
             }
         };
         let grad_scratch = Vec::with_capacity(manifest.param_count);
@@ -260,6 +223,8 @@ impl<'rt> Trainer<'rt> {
         } else {
             (Vec::new(), 0)
         };
+        let shared = Arc::new(PrepShared { manifest: manifest.clone(), features, feature_dim });
+        let pool = (cfg.train.host_threads > 0).then(|| HostPool::new(cfg.train.host_threads));
         // Pre-compile every train_step bucket so epoch timings measure
         // steady-state execution, not one-off PJRT compilation.
         for e in &manifest.entries {
@@ -278,8 +243,8 @@ impl<'rt> Trainer<'rt> {
             grads_accum,
             sparse_accum,
             grad_scratch,
-            features,
-            feature_dim,
+            shared,
+            pool,
             history: RunHistory::default(),
             epoch_counter: 0,
         })
@@ -294,6 +259,52 @@ impl<'rt> Trainer<'rt> {
         self.workers.iter().map(|w| w.ctx.core_edges.len()).collect()
     }
 
+    /// Phase 1 (per paper Algorithm 1 line 3): every worker samples its
+    /// epoch negatives and builds its shuffled batch plan. With a host
+    /// pool the P workers plan in parallel; the per-(epoch, wid) RNG
+    /// streams make the resulting plans identical either way.
+    fn plan_epoch(&self, epoch: usize) -> Result<(Vec<Arc<EpochBatches>>, usize)> {
+        let p = self.workers.len();
+        let seed = self.cfg.train.seed;
+        let per_pos = self.cfg.train.negatives_per_positive;
+        let batch_edges = self.cfg.train.batch_edges;
+        if let Some(pool) = &self.pool {
+            let (tx, rx) = mpsc::channel();
+            for (wid, w) in self.workers.iter().enumerate() {
+                let ctx = Arc::clone(&w.ctx);
+                let sampler = Arc::clone(&w.sampler);
+                let tx = tx.clone();
+                pool.submit(move || {
+                    let mut rng = Rng::seeded(worker_epoch_seed(seed, epoch, wid));
+                    let (negs, remote) = sampler.sample_epoch(&ctx, per_pos, &mut rng);
+                    let ep = EpochBatches::build(&ctx, negs, batch_edges, &mut rng);
+                    let _ = tx.send((wid, ep, remote));
+                });
+            }
+            drop(tx);
+            let mut slots: Vec<Option<Arc<EpochBatches>>> = (0..p).map(|_| None).collect();
+            let mut total_remote = 0usize;
+            for _ in 0..p {
+                let (wid, ep, remote) =
+                    rx.recv().map_err(|_| anyhow::anyhow!("epoch-plan worker died"))?;
+                slots[wid] = Some(Arc::new(ep));
+                total_remote += remote;
+            }
+            let plans = slots.into_iter().map(|s| s.expect("one plan per worker")).collect();
+            Ok((plans, total_remote))
+        } else {
+            let mut plans = Vec::with_capacity(p);
+            let mut total_remote = 0usize;
+            for (wid, w) in self.workers.iter().enumerate() {
+                let mut rng = Rng::seeded(worker_epoch_seed(seed, epoch, wid));
+                let (negs, remote) = w.sampler.sample_epoch(&w.ctx, per_pos, &mut rng);
+                total_remote += remote;
+                plans.push(Arc::new(EpochBatches::build(&w.ctx, negs, batch_edges, &mut rng)));
+            }
+            Ok((plans, total_remote))
+        }
+    }
+
     /// Run one epoch of synchronous distributed training; returns the
     /// epoch record (also appended to `history`).
     pub fn train_epoch(&mut self) -> Result<EpochRecord> {
@@ -302,22 +313,8 @@ impl<'rt> Trainer<'rt> {
         let wall = Stopwatch::new();
         let mut clk = VirtualClock::new();
         let mut components = ComponentTimes::new();
-        let p = self.workers.len();
 
-        // Phase 1 (per paper Algorithm 1 line 3): every worker samples
-        // its epoch negatives and builds its shuffled batch plan.
-        let mut plans: Vec<Vec<Vec<TrainTriple>>> = Vec::with_capacity(p);
-        let mut total_remote = 0usize;
-        for (wid, w) in self.workers.iter_mut().enumerate() {
-            let mut rng = Rng::seeded(
-                self.cfg.train.seed ^ (epoch as u64) << 20 ^ (wid as u64) << 8 | 1,
-            );
-            let (negs, remote) =
-                w.sampler.sample_epoch(&w.ctx, self.cfg.train.negatives_per_positive, &mut rng);
-            total_remote += remote;
-            let ep = EpochBatches::build(&w.ctx, negs, self.cfg.train.batch_edges, &mut rng);
-            plans.push(ep.iter().map(|b| b.to_vec()).collect());
-        }
+        let (plans, total_remote) = self.plan_epoch(epoch)?;
         // Remote fetches (global-negative ablation) are charged to the
         // virtual clock: one embedding row per fetch.
         if total_remote > 0 {
@@ -325,101 +322,29 @@ impl<'rt> Trainer<'rt> {
             clk.advance(total_remote as f64 * self.net.fetch_secs(bytes));
         }
 
-        let steps = plans.iter().map(|b| b.len()).max().unwrap_or(0);
-        let mut loss_sum = 0f64;
-        let mut count_sum = 0f64;
-        let mut touched_sum = 0f64;
-        let mut sync_bytes_sum = 0f64;
-
-        for step in 0..steps {
-            // Reset the step accumulator: O(param_count) only in dense
-            // mode; the sparse modes clear just the previously-touched
-            // rows + the small dense tail.
-            match self.cfg.train.grad_mode {
-                GradMode::Dense => self.grads_accum.fill(0.0),
-                _ => self.sparse_accum.as_mut().expect("sparse accumulator").clear(),
-            }
-            let mut step_compute: Vec<f64> = Vec::with_capacity(p);
-            let mut step_loss = 0f64;
-            let mut step_count = 0f64;
-            for wid in 0..p {
-                let Some(batch) = plans[wid].get(step) else { continue };
-                let mut sink = match self.cfg.train.grad_mode {
-                    GradMode::Dense => GradSink::Dense(&mut self.grads_accum),
-                    _ => GradSink::Sparse(
-                        self.sparse_accum.as_mut().expect("sparse accumulator"),
-                    ),
-                };
-                let out = run_worker_batch(
-                    &mut self.workers[wid],
-                    batch,
-                    &self.cfg,
-                    &self.manifest,
-                    self.runtime,
-                    &self.params,
-                    &mut sink,
-                    &mut self.grad_scratch,
-                    (&self.features, self.feature_dim),
-                    epoch,
-                )?;
-                step_loss += out.loss_sum;
-                step_count += out.count;
-                components.get_compute_graph.push(out.cg_secs);
-                components.gnn_model.push(out.exec_secs);
-                step_compute.push(out.compute_secs);
-            }
-            // Gradient averaging: modeled sync + measured optimizer step.
-            // Sparse sync is charged on the bytes that actually move —
-            // the union touched rows + dense tail — instead of the full
-            // param_count * 4.
-            let (sync_bytes, touched) = match &self.sparse_accum {
-                Some(sg) if self.cfg.train.grad_sync == GradSync::Sparse => {
-                    (sg.transfer_bytes(), sg.touched_rows())
-                }
-                Some(sg) => (self.manifest.param_count * 4, sg.touched_rows()),
-                None => (self.manifest.param_count * 4, 0),
-            };
-            touched_sum += touched as f64;
-            sync_bytes_sum += sync_bytes as f64;
-            let sync_model_secs =
-                self.net.sync_secs(self.cfg.train.grad_sync, sync_bytes, p);
-            let opt_sw = Stopwatch::new();
-            if step_count > 0.0 {
-                let inv = (1.0 / step_count) as f32;
-                match self.cfg.train.grad_mode {
-                    GradMode::Dense => {
-                        for g in self.grads_accum.iter_mut() {
-                            *g *= inv;
-                        }
-                        self.opt.step(&mut self.params, &self.grads_accum);
-                    }
-                    GradMode::Sparse => {
-                        // Scatter into the persistent all-zero dense
-                        // vector and run the reference Adam: bit-identical
-                        // to dense mode, O(touched) scatter + unscatter.
-                        let sg = self.sparse_accum.as_mut().expect("sparse accumulator");
-                        sg.scale(inv);
-                        sg.scatter_into(&mut self.grads_accum);
-                        self.opt.step(&mut self.params, &self.grads_accum);
-                        sg.clear_scatter(&mut self.grads_accum);
-                    }
-                    GradMode::SparseLazy => {
-                        let sg = self.sparse_accum.as_mut().expect("sparse accumulator");
-                        sg.scale(inv);
-                        self.opt.step_lazy(&mut self.params, sg);
-                    }
-                }
-            }
-            let opt_secs = opt_sw.elapsed_secs();
-            components.sync_step.push(sync_model_secs + opt_secs);
-            clk.step(&step_compute, sync_model_secs + opt_secs);
-            loss_sum += step_loss;
-            count_sum += step_count;
+        let steps = plans.iter().map(|b| b.num_batches()).max().unwrap_or(0);
+        let mut stats = EpochStats::default();
+        if self.pool.is_some() {
+            self.steps_pipelined(epoch, &plans, steps, &mut clk, &mut components, &mut stats)?;
+        } else {
+            self.steps_sequential(epoch, &plans, steps, &mut clk, &mut components, &mut stats)?;
         }
 
+        // Overlap efficiency: the share of host prep work hidden behind
+        // coordinator execution. 0.0 on the sequential path (no
+        // concurrent prep to hide).
+        let overlap = if stats.prep_busy_secs > 0.0 {
+            ((stats.prep_busy_secs - stats.stall_secs) / stats.prep_busy_secs).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
         let record = EpochRecord {
             epoch,
-            mean_loss: if count_sum > 0.0 { loss_sum / count_sum } else { f64::NAN },
+            mean_loss: if stats.count_sum > 0.0 {
+                stats.loss_sum / stats.count_sum
+            } else {
+                f64::NAN
+            },
             virtual_secs: clk.now(),
             wall_secs: wall.elapsed_secs(),
             num_steps: steps,
@@ -427,11 +352,315 @@ impl<'rt> Trainer<'rt> {
             avg_gnn_model: components.gnn_model.mean(),
             avg_sync_step: components.sync_step.mean(),
             remote_fetches: total_remote,
-            avg_touched_rows: if steps > 0 { touched_sum / steps as f64 } else { 0.0 },
-            avg_sync_bytes: if steps > 0 { sync_bytes_sum / steps as f64 } else { 0.0 },
+            avg_touched_rows: if steps > 0 { stats.touched_sum / steps as f64 } else { 0.0 },
+            avg_sync_bytes: if steps > 0 { stats.sync_bytes_sum / steps as f64 } else { 0.0 },
+            prefetch_stall_secs: stats.stall_secs,
+            overlap_efficiency: overlap,
         };
         self.history.epochs.push(record.clone());
         Ok(record)
+    }
+
+    /// Sequential reference path: prepare and execute each worker's
+    /// batch inline, in `wid` order.
+    fn steps_sequential(
+        &mut self,
+        epoch: usize,
+        plans: &[Arc<EpochBatches>],
+        steps: usize,
+        clk: &mut VirtualClock,
+        components: &mut ComponentTimes,
+        stats: &mut EpochStats,
+    ) -> Result<()> {
+        let p = self.workers.len();
+        let mut units: Vec<PreparedUnit> = Vec::new();
+        for step in 0..steps {
+            self.reset_step_accumulator();
+            let mut step_compute: Vec<f64> = Vec::with_capacity(p);
+            let mut step_loss = 0f64;
+            let mut step_count = 0f64;
+            for wid in 0..p {
+                let Some(batch) = plans[wid].batch(step) else { continue };
+                let mut cg_secs = 0f64;
+                {
+                    let w = &mut self.workers[wid];
+                    let state = w.prep.as_mut().expect("prep state resident when sequential");
+                    prepare_batch(state, &w.ctx, &self.shared, batch, &mut units, &mut cg_secs)?;
+                }
+                let (loss, count, exec_secs) = self.execute_worker_units(&units, epoch)?;
+                let state = self.workers[wid].prep.as_mut().expect("prep state resident");
+                for u in units.drain(..) {
+                    state.spare.push(u.scratch);
+                }
+                step_loss += loss;
+                step_count += count;
+                components.get_compute_graph.push(cg_secs);
+                components.gnn_model.push(exec_secs);
+                step_compute.push(cg_secs + exec_secs);
+            }
+            components.prefetch_stall.push(0.0);
+            stats.loss_sum += step_loss;
+            stats.count_sum += step_count;
+            self.sync_and_step(&step_compute, step_count, clk, components, stats);
+        }
+        Ok(())
+    }
+
+    /// Pipelined path: prep jobs for up to `prefetch_depth` steps ahead
+    /// run on the host pool while the coordinator executes the current
+    /// step. Per-worker results arrive in step order (a worker's
+    /// `PrepState` is owned by one job at a time, serializing its
+    /// steps), and the coordinator consumes them in fixed `wid` order —
+    /// so accumulation order matches the sequential path exactly.
+    fn steps_pipelined(
+        &mut self,
+        epoch: usize,
+        plans: &[Arc<EpochBatches>],
+        steps: usize,
+        clk: &mut VirtualClock,
+        components: &mut ComponentTimes,
+        stats: &mut EpochStats,
+    ) -> Result<()> {
+        let p = self.workers.len();
+        let (tx, rx) = mpsc::channel::<PrepResult>();
+        let mut next_prep = vec![0usize; p];
+        let mut pending_scratch: Vec<Vec<_>> = (0..p).map(|_| Vec::new()).collect();
+        let mut ready: Vec<VecDeque<(Vec<PreparedUnit>, f64)>> =
+            (0..p).map(|_| VecDeque::new()).collect();
+        let mut in_flight = 0usize;
+
+        let result = self.pipelined_loop(
+            epoch,
+            plans,
+            steps,
+            clk,
+            components,
+            stats,
+            &tx,
+            &rx,
+            &mut next_prep,
+            &mut pending_scratch,
+            &mut in_flight,
+            &mut ready,
+        );
+        // Success leaves nothing in flight; on error, bring every
+        // outstanding prep state home so the trainer stays usable.
+        while in_flight > 0 {
+            match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(r) => {
+                    in_flight -= 1;
+                    self.workers[r.wid].prep = Some(r.state);
+                }
+                Err(_) => break,
+            }
+        }
+        result
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn pipelined_loop(
+        &mut self,
+        epoch: usize,
+        plans: &[Arc<EpochBatches>],
+        steps: usize,
+        clk: &mut VirtualClock,
+        components: &mut ComponentTimes,
+        stats: &mut EpochStats,
+        tx: &Sender<PrepResult>,
+        rx: &Receiver<PrepResult>,
+        next_prep: &mut [usize],
+        pending_scratch: &mut [Vec<PadScratch>],
+        in_flight: &mut usize,
+        ready: &mut [VecDeque<(Vec<PreparedUnit>, f64)>],
+    ) -> Result<()> {
+        let p = self.workers.len();
+        let depth = self.cfg.train.prefetch_depth;
+        for step in 0..steps {
+            self.submit_prep_jobs(plans, tx, next_prep, pending_scratch, in_flight, step, depth);
+            self.reset_step_accumulator();
+            let mut step_compute: Vec<f64> = Vec::with_capacity(p);
+            let mut step_loss = 0f64;
+            let mut step_count = 0f64;
+            let mut step_stall = 0f64;
+            for wid in 0..p {
+                if step >= plans[wid].num_batches() {
+                    continue;
+                }
+                while ready[wid].is_empty() {
+                    let stall_sw = Stopwatch::new();
+                    let r = rx.recv().map_err(|_| anyhow::anyhow!("prep result channel closed"))?;
+                    step_stall += stall_sw.elapsed_secs();
+                    *in_flight -= 1;
+                    stats.prep_busy_secs += r.prep_secs;
+                    self.workers[r.wid].prep = Some(r.state);
+                    let (units, cg_secs) = r.units?;
+                    ready[r.wid].push_back((units, cg_secs));
+                    self.submit_prep_jobs(
+                        plans,
+                        tx,
+                        next_prep,
+                        pending_scratch,
+                        in_flight,
+                        step,
+                        depth,
+                    );
+                }
+                // Per-wid results arrive in step order, so the front of
+                // the queue is exactly this step's prepared batch.
+                let (units, cg_secs) = ready[wid].pop_front().expect("nonempty after wait");
+                let (loss, count, exec_secs) = self.execute_worker_units(&units, epoch)?;
+                pending_scratch[wid].extend(units.into_iter().map(|u| u.scratch));
+                step_loss += loss;
+                step_count += count;
+                components.get_compute_graph.push(cg_secs);
+                components.gnn_model.push(exec_secs);
+                step_compute.push(cg_secs + exec_secs);
+            }
+            components.prefetch_stall.push(step_stall);
+            stats.stall_secs += step_stall;
+            stats.loss_sum += step_loss;
+            stats.count_sum += step_count;
+            self.sync_and_step(&step_compute, step_count, clk, components, stats);
+        }
+        Ok(())
+    }
+
+    /// Submit one prep job per worker whose state is resident, next
+    /// batch exists, and whose prep is at most `depth` steps ahead of
+    /// execution. At most one job per worker is ever in flight (the
+    /// job owns the worker's `PrepState`), which both serializes a
+    /// worker's steps and bounds buffered scratch.
+    #[allow(clippy::too_many_arguments)]
+    fn submit_prep_jobs(
+        &mut self,
+        plans: &[Arc<EpochBatches>],
+        tx: &Sender<PrepResult>,
+        next_prep: &mut [usize],
+        pending_scratch: &mut [Vec<PadScratch>],
+        in_flight: &mut usize,
+        exec_step: usize,
+        depth: usize,
+    ) {
+        let pool = self.pool.as_ref().expect("pipelined path has a pool");
+        for wid in 0..self.workers.len() {
+            let s = next_prep[wid];
+            if s >= plans[wid].num_batches() || s > exec_step + depth {
+                continue;
+            }
+            let Some(mut state) = self.workers[wid].prep.take() else { continue };
+            // Recycle scratch returned by executed units before the
+            // state leaves the coordinator.
+            state.spare.append(&mut pending_scratch[wid]);
+            let ctx = Arc::clone(&self.workers[wid].ctx);
+            let shared = Arc::clone(&self.shared);
+            let plan = Arc::clone(&plans[wid]);
+            let tx = tx.clone();
+            pool.submit(move || {
+                let sw = Stopwatch::new();
+                let mut units = Vec::new();
+                let mut cg_secs = 0f64;
+                let res = match plan.batch(s) {
+                    Some(batch) => {
+                        prepare_batch(&mut state, &ctx, &shared, batch, &mut units, &mut cg_secs)
+                            .map(|()| (units, cg_secs))
+                    }
+                    None => Err(anyhow::anyhow!("prep step {s} out of plan range")),
+                };
+                let prep_secs = sw.elapsed_secs();
+                let _ = tx.send(PrepResult { wid, state, units: res, prep_secs });
+            });
+            next_prep[wid] = s + 1;
+            *in_flight += 1;
+        }
+    }
+
+    /// Reset the step accumulator: O(param_count) only in dense mode;
+    /// the sparse modes clear just the previously-touched rows + the
+    /// small dense remainder.
+    fn reset_step_accumulator(&mut self) {
+        match self.cfg.train.grad_mode {
+            GradMode::Dense => self.grads_accum.fill(0.0),
+            _ => self.sparse_accum.as_mut().expect("sparse accumulator").clear(),
+        }
+    }
+
+    /// Execute one worker's prepared units on the coordinator,
+    /// accumulating gradients into the configured sink. Returns
+    /// (Σ loss, triple count, exec seconds).
+    fn execute_worker_units(
+        &mut self,
+        units: &[PreparedUnit],
+        epoch: usize,
+    ) -> Result<(f64, f64, f64)> {
+        let mut sink = match self.cfg.train.grad_mode {
+            GradMode::Dense => GradSink::Dense(&mut self.grads_accum),
+            _ => GradSink::Sparse(self.sparse_accum.as_mut().expect("sparse accumulator")),
+        };
+        execute_units(
+            units,
+            &self.manifest,
+            self.runtime,
+            &self.params,
+            &mut sink,
+            &mut self.grad_scratch,
+            self.cfg.train.seed,
+            epoch,
+        )
+    }
+
+    /// Gradient averaging: modeled sync + measured optimizer step, then
+    /// advance the virtual clock. Sparse sync is charged on the bytes
+    /// that actually move — the union touched entity/relation rows +
+    /// dense remainder — instead of the full `param_count * 4`.
+    fn sync_and_step(
+        &mut self,
+        step_compute: &[f64],
+        step_count: f64,
+        clk: &mut VirtualClock,
+        components: &mut ComponentTimes,
+        stats: &mut EpochStats,
+    ) {
+        let p = self.workers.len();
+        let (sync_bytes, touched) = match &self.sparse_accum {
+            Some(sg) if self.cfg.train.grad_sync == GradSync::Sparse => {
+                (sg.transfer_bytes(), sg.touched_rows())
+            }
+            Some(sg) => (self.manifest.param_count * 4, sg.touched_rows()),
+            None => (self.manifest.param_count * 4, 0),
+        };
+        stats.touched_sum += touched as f64;
+        stats.sync_bytes_sum += sync_bytes as f64;
+        let sync_model_secs = self.net.sync_secs(self.cfg.train.grad_sync, sync_bytes, p);
+        let opt_sw = Stopwatch::new();
+        if step_count > 0.0 {
+            let inv = (1.0 / step_count) as f32;
+            match self.cfg.train.grad_mode {
+                GradMode::Dense => {
+                    for g in self.grads_accum.iter_mut() {
+                        *g *= inv;
+                    }
+                    self.opt.step(&mut self.params, &self.grads_accum);
+                }
+                GradMode::Sparse => {
+                    // Scatter into the persistent all-zero dense vector
+                    // and run the reference Adam: bit-identical to dense
+                    // mode, O(touched) scatter + unscatter.
+                    let sg = self.sparse_accum.as_mut().expect("sparse accumulator");
+                    sg.scale(inv);
+                    sg.scatter_into(&mut self.grads_accum);
+                    self.opt.step(&mut self.params, &self.grads_accum);
+                    sg.clear_scatter(&mut self.grads_accum);
+                }
+                GradMode::SparseLazy => {
+                    let sg = self.sparse_accum.as_mut().expect("sparse accumulator");
+                    sg.scale(inv);
+                    self.opt.step_lazy(&mut self.params, sg);
+                }
+            }
+        }
+        let opt_secs = opt_sw.elapsed_secs();
+        components.sync_step.push(sync_model_secs + opt_secs);
+        clk.step(step_compute, sync_model_secs + opt_secs);
     }
 
     /// Record an external evaluation point (Figure 7 series).
@@ -474,116 +703,73 @@ impl<'rt> Trainer<'rt> {
     }
 }
 
-/// Run one worker's batch (with recursive split if the compute graph
-/// exceeds every compiled bucket), accumulating gradients and loss into
-/// `sink`.
+/// Execute prepared units in order on the coordinator thread (the only
+/// place PJRT types are touched), accumulating loss and gradients into
+/// `sink`. Returns (Σ loss, triple count, exec seconds).
 #[allow(clippy::too_many_arguments)]
-fn run_worker_batch(
-    w: &mut Worker,
-    batch: &[TrainTriple],
-    cfg: &ExperimentConfig,
+fn execute_units(
+    units: &[PreparedUnit],
     manifest: &Manifest,
     runtime: &Runtime,
     params: &[f32],
     sink: &mut GradSink<'_>,
     grad_scratch: &mut Vec<f32>,
-    features: (&[f32], usize),
+    train_seed: u64,
     epoch: usize,
-) -> Result<StepOutput> {
-    let hops = manifest.num_layers;
-    let relations = manifest.relations;
-    let cg_sw = Stopwatch::new();
-    let cg = w.builder.build(&w.ctx, batch, hops, relations);
-    let cg_secs = cg_sw.elapsed_secs();
-
-    let bucket = manifest.pick_train_bucket(cg.num_nodes(), cg.num_edges(), cg.num_triples());
-    let Some(crate::model::EntryInfo::TrainStep { file, nodes, edges, triples }) = bucket else {
-        // No bucket fits: split the batch and recurse (sum-losses make
-        // this exactly equivalent).
-        anyhow::ensure!(
-            batch.len() > 1,
-            "compute graph of a single triple (n={}, e={}) exceeds all compiled buckets — \
-             re-run `kgscale plan` + `make artifacts`",
-            cg.num_nodes(),
-            cg.num_edges()
-        );
-        crate::log_warn!(
-            "batch of {} triples overflows buckets (n={} e={}); splitting",
-            batch.len(),
-            cg.num_nodes(),
-            cg.num_edges()
-        );
-        let mid = batch.len() / 2;
-        let a = run_worker_batch(
-            w, &batch[..mid], cfg, manifest, runtime, params, sink, grad_scratch,
-            features, epoch,
-        )?;
-        let b = run_worker_batch(
-            w, &batch[mid..], cfg, manifest, runtime, params, sink, grad_scratch,
-            features, epoch,
-        )?;
-        return Ok(StepOutput {
-            loss_sum: a.loss_sum + b.loss_sum,
-            count: a.count + b.count,
-            compute_secs: a.compute_secs + b.compute_secs + cg_secs,
-            cg_secs: a.cg_secs + b.cg_secs + cg_secs,
-            exec_secs: a.exec_secs + b.exec_secs,
-        });
-    };
-    let (file, nodes, edges, triples) = (file.clone(), *nodes, *edges, *triples);
-
+) -> Result<(f64, f64, f64)> {
     let provided = manifest.mode == "provided";
-    w.scratch.fill(&cg, features.0, features.1, nodes, edges, triples);
-
-    let exe = runtime.load(&file)?;
-    let exec_sw = Stopwatch::new();
-    let seed = (cfg.train.seed as i32) ^ ((epoch as i32) << 10);
-    let s = &w.scratch;
-    let node_input = if provided {
-        HostTensor::F32(&s.node_feat, &[nodes as i64, manifest.feature_dim as i64])
-    } else {
-        HostTensor::I32(&s.node_ids, &[nodes as i64])
-    };
-    let outputs = exe.run(&[
-        HostTensor::F32(params, &[params.len() as i64]),
-        node_input,
-        HostTensor::I32(&s.src, &[edges as i64]),
-        HostTensor::I32(&s.dst, &[edges as i64]),
-        HostTensor::I32(&s.rel, &[edges as i64]),
-        HostTensor::F32(&s.emask, &[edges as i64]),
-        HostTensor::I32(&s.ts, &[triples as i64]),
-        HostTensor::I32(&s.tr, &[triples as i64]),
-        HostTensor::I32(&s.tt, &[triples as i64]),
-        HostTensor::F32(&s.labels, &[triples as i64]),
-        HostTensor::F32(&s.tmask, &[triples as i64]),
-        HostTensor::ScalarI32(seed),
-    ])?;
-    let exec_secs = exec_sw.elapsed_secs();
-    anyhow::ensure!(outputs.len() == 2, "train_step returned {} outputs", outputs.len());
-    let loss_sum = literal_scalar_f32(&outputs[0])? as f64;
-    // Readback reuses `grad_scratch`'s allocation (no per-batch Vec).
-    literal_to_f32_into(&outputs[1], grad_scratch)?;
-    anyhow::ensure!(
-        grad_scratch.len() == manifest.param_count,
-        "gradient length mismatch: {} vs {}",
-        grad_scratch.len(),
-        manifest.param_count
-    );
-    match sink {
-        GradSink::Dense(acc) => {
-            for (a, g) in acc.iter_mut().zip(grad_scratch.iter()) {
-                *a += g;
+    let seed = (train_seed as i32) ^ ((epoch as i32) << 10);
+    let mut loss_sum = 0f64;
+    let mut count = 0f64;
+    let mut exec_secs = 0f64;
+    for u in units {
+        let exe = runtime.load(&u.file)?;
+        let exec_sw = Stopwatch::new();
+        let s = &u.scratch;
+        let node_input = if provided {
+            HostTensor::F32(&s.node_feat, &[u.nodes as i64, manifest.feature_dim as i64])
+        } else {
+            HostTensor::I32(&s.node_ids, &[u.nodes as i64])
+        };
+        let outputs = exe.run(&[
+            HostTensor::F32(params, &[params.len() as i64]),
+            node_input,
+            HostTensor::I32(&s.src, &[u.edges as i64]),
+            HostTensor::I32(&s.dst, &[u.edges as i64]),
+            HostTensor::I32(&s.rel, &[u.edges as i64]),
+            HostTensor::F32(&s.emask, &[u.edges as i64]),
+            HostTensor::I32(&s.ts, &[u.triples as i64]),
+            HostTensor::I32(&s.tr, &[u.triples as i64]),
+            HostTensor::I32(&s.tt, &[u.triples as i64]),
+            HostTensor::F32(&s.labels, &[u.triples as i64]),
+            HostTensor::F32(&s.tmask, &[u.triples as i64]),
+            HostTensor::ScalarI32(seed),
+        ])?;
+        exec_secs += exec_sw.elapsed_secs();
+        anyhow::ensure!(outputs.len() == 2, "train_step returned {} outputs", outputs.len());
+        loss_sum += literal_scalar_f32(&outputs[0])? as f64;
+        // Readback reuses `grad_scratch`'s allocation (no per-batch Vec).
+        literal_to_f32_into(&outputs[1], grad_scratch)?;
+        anyhow::ensure!(
+            grad_scratch.len() == manifest.param_count,
+            "gradient length mismatch: {} vs {}",
+            grad_scratch.len(),
+            manifest.param_count
+        );
+        match sink {
+            GradSink::Dense(acc) => {
+                for (a, g) in acc.iter_mut().zip(grad_scratch.iter()) {
+                    *a += g;
+                }
+            }
+            // Only the touched entity rows + touched relation rows (+
+            // the dense remainder) are accumulated: O(touched·dim +
+            // remainder) instead of O(param_count).
+            GradSink::Sparse(sg) => {
+                sg.accumulate_with_rels(&u.cg.nodes_global, &u.cg.tr, grad_scratch)
             }
         }
-        // Only the compute graph's touched rows (+ the dense tail) are
-        // accumulated: O(touched·dim + tail) instead of O(param_count).
-        GradSink::Sparse(sg) => sg.accumulate(&cg.nodes_global, grad_scratch),
+        count += u.batch_len as f64;
     }
-    Ok(StepOutput {
-        loss_sum,
-        count: batch.len() as f64,
-        compute_secs: cg_secs + exec_secs,
-        cg_secs,
-        exec_secs,
-    })
+    Ok((loss_sum, count, exec_secs))
 }

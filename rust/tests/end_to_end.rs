@@ -180,6 +180,56 @@ fn run_mode(
     (losses, t.params, touched, sync_bytes)
 }
 
+/// The pipelined host data path's central contract: with any
+/// `host_threads` setting, training is *bit-identical* to the
+/// `host_threads = 0` sequential reference — same losses, same final
+/// parameters — for every gradient mode. Overlap only changes *when*
+/// batches are prepared, never their contents or accumulation order.
+#[test]
+fn pipelined_path_bit_identical_to_sequential() {
+    let Some((runtime, manifest)) = artifacts() else { return };
+    let g = generator::generate(&ExperimentConfig::tiny().dataset);
+    let run = |mode: GradMode, threads: usize| -> (Vec<f64>, Vec<f32>, Vec<f64>, Vec<f64>) {
+        let mut c = ExperimentConfig::tiny();
+        c.train.batch_edges = 64;
+        c.train.num_trainers = 2;
+        c.train.grad_mode = mode;
+        c.train.grad_sync = GradSync::Ring;
+        c.train.host_threads = threads;
+        c.train.prefetch_depth = 2;
+        let mut t = Trainer::new(c, &g, &runtime, manifest.clone()).unwrap();
+        let (mut losses, mut stalls, mut overlaps) = (Vec::new(), Vec::new(), Vec::new());
+        for _ in 0..3 {
+            let r = t.train_epoch().unwrap();
+            losses.push(r.mean_loss);
+            stalls.push(r.prefetch_stall_secs);
+            overlaps.push(r.overlap_efficiency);
+        }
+        (losses, t.params, stalls, overlaps)
+    };
+    for mode in [GradMode::Dense, GradMode::Sparse, GradMode::SparseLazy] {
+        let (seq_losses, seq_params, seq_stalls, seq_overlaps) = run(mode, 0);
+        // The sequential path never stalls and reports no overlap.
+        assert!(seq_stalls.iter().all(|&s| s == 0.0), "{mode:?}: {seq_stalls:?}");
+        assert!(seq_overlaps.iter().all(|&o| o == 0.0), "{mode:?}: {seq_overlaps:?}");
+        for threads in [1usize, 3] {
+            let (losses, params, stalls, overlaps) = run(mode, threads);
+            assert_eq!(
+                seq_losses,
+                losses,
+                "{mode:?}, host_threads={threads}: losses must match sequential bit-for-bit"
+            );
+            assert_eq!(
+                seq_params,
+                params,
+                "{mode:?}, host_threads={threads}: params must match sequential bit-for-bit"
+            );
+            assert!(stalls.iter().all(|&s| s >= 0.0));
+            assert!(overlaps.iter().all(|&o| (0.0..=1.0).contains(&o)));
+        }
+    }
+}
+
 /// The row-sparse gradient path's central claim: `sparse` (row-sparse
 /// accumulation + dense Adam) is *bit-identical* to the `dense`
 /// reference — same losses, same parameters — because rows outside the
@@ -224,8 +274,9 @@ fn gradient_mode_lazy_adam_tracks_dense_trajectory() {
 }
 
 /// Under `grad_sync = "sparse"` the reported wire bytes follow the
-/// touched-row accounting exactly: rows × (dim·4 + 4 index bytes) plus
-/// the dense (non-embedding) tail.
+/// touched-row accounting exactly: touched entity rows × (dim·4 + 4
+/// index bytes) + touched relation rows × (dim·4 + 4) + the dense
+/// remainder outside both tables.
 #[test]
 fn sparse_sync_reports_touched_row_bytes() {
     let Some((runtime, manifest)) = artifacts() else { return };
@@ -235,11 +286,34 @@ fn sparse_sync_reports_touched_row_bytes() {
     assert_eq!(ring_bytes, (manifest.param_count * 4) as f64);
     let (_, _, touched, sparse_bytes) =
         run_mode(&runtime, &manifest, &g, GradMode::Sparse, GradSync::Sparse);
-    let seg = manifest.embedding_segment().expect("tiny manifest has ent_emb");
-    let tail = manifest.param_count - seg.rows * seg.dim;
-    let expect = touched * (seg.dim * 4 + 4) as f64 + (tail * 4) as f64;
-    assert!(
-        (sparse_bytes - expect).abs() < 1e-6 * expect.max(1.0),
-        "sparse bytes {sparse_bytes} != touched-row accounting {expect}"
-    );
+    let ent = manifest.embedding_segment().expect("tiny manifest has ent_emb");
+    // Mirror the trainer's guard: the relation table only counts as a
+    // sparse segment when it follows the entity table in the layout.
+    match manifest.relation_segment().filter(|r| r.offset >= ent.end()) {
+        Some(rel) => {
+            let rest = manifest.param_count - ent.len() - rel.len();
+            let base = touched * (ent.dim * 4 + 4) as f64 + (rest * 4) as f64;
+            let rel_cap = (rel.rows * (rel.dim * 4 + 4)) as f64;
+            // Every step touches at least one relation row and at most
+            // the whole table; the epoch mean sits strictly between.
+            assert!(
+                sparse_bytes > base,
+                "sparse bytes {sparse_bytes} missing relation rows (base {base})"
+            );
+            assert!(
+                sparse_bytes <= base + rel_cap,
+                "sparse bytes {sparse_bytes} exceed full-table bound {}",
+                base + rel_cap
+            );
+        }
+        None => {
+            // 1-D rel_dec: everything outside ent_emb is dense tail.
+            let tail = manifest.param_count - ent.len();
+            let expect = touched * (ent.dim * 4 + 4) as f64 + (tail * 4) as f64;
+            assert!(
+                (sparse_bytes - expect).abs() < 1e-6 * expect.max(1.0),
+                "sparse bytes {sparse_bytes} != touched-row accounting {expect}"
+            );
+        }
+    }
 }

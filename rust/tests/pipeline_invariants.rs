@@ -224,6 +224,75 @@ fn prop_allreduce_equivalence() {
     });
 }
 
+/// `EpochBatches::batch(i)` is a zero-copy view of exactly the i-th
+/// chunk the iterator yields, and `None` past the end — the pipelined
+/// trainer indexes batches directly instead of re-collecting the epoch.
+#[test]
+fn prop_batch_accessor_matches_iteration() {
+    prop_check("batch-accessor", 0xBA7C4, 5, |rng| {
+        let g = gen::small_kg(rng);
+        let cfg = PartitionConfig {
+            strategy: PartitionStrategy::Hdrf,
+            num_partitions: 1 + rng.below(3),
+            hops: 2,
+            hdrf_lambda: 1.0,
+        };
+        let parts = partition::partition_graph(&g, &cfg, rng.next_u64());
+        let ctx = PartContext::new(&parts[0]);
+        let sampler = NegativeSampler::new(&ctx, Scope::LocalCore, g.num_entities);
+        let mut srng = Rng::seeded(rng.next_u64());
+        let (negs, _) = sampler.sample_epoch(&ctx, 1, &mut srng);
+        let batch_pos = [0usize, 16, 64][rng.below(3)];
+        let ep = EpochBatches::build(&ctx, negs, batch_pos, &mut srng);
+        for (i, chunk) in ep.iter().enumerate() {
+            assert_eq!(ep.batch(i), Some(chunk), "batch {i} differs from iterator");
+        }
+        assert_eq!(ep.iter().count(), ep.num_batches());
+        assert!(ep.batch(ep.num_batches()).is_none());
+    });
+}
+
+/// The per-(epoch, wid) RNG seeds driving epoch planning are pairwise
+/// distinct over a realistic grid — a collision would hand two workers
+/// (or two epochs) identical negative samples and batch shuffles.
+#[test]
+fn worker_epoch_seeds_pairwise_distinct() {
+    for base in [0u64, 7, 42, u64::MAX / 3] {
+        let mut seen = HashSet::new();
+        for epoch in 0..64 {
+            for wid in 0..16 {
+                assert!(
+                    seen.insert(kgscale::train::worker_epoch_seed(base, epoch, wid)),
+                    "seed collision at base={base} epoch={epoch} wid={wid}"
+                );
+            }
+        }
+    }
+}
+
+/// The host prep pool runs every submitted job exactly once and joins
+/// its threads on drop (no lost or duplicated prep work).
+#[test]
+fn host_pool_completes_all_jobs() {
+    use std::sync::mpsc;
+    for threads in [1usize, 4] {
+        let (tx, rx) = mpsc::channel();
+        {
+            let pool = kgscale::train::HostPool::new(threads);
+            assert_eq!(pool.threads(), threads);
+            for i in 0..100u32 {
+                let tx = tx.clone();
+                pool.submit(move || tx.send(i).expect("collector alive"));
+            }
+            // Dropping the pool joins all workers, so every job has run.
+        }
+        drop(tx);
+        let mut got: Vec<u32> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..100).collect::<Vec<_>>(), "threads={threads}");
+    }
+}
+
 /// Determinism: the full pipeline (partition -> sample -> batch -> CG)
 /// is bit-identical across runs with the same seeds.
 #[test]

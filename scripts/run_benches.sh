@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Run the timing benches and collect machine-readable results at the
+# repo root. The epoch bench always produces BENCH_epoch.json; its
+# train_epoch section (and the other benches' XLA paths) need
+# `make artifacts` to have built artifacts/tiny first.
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+cd "$repo_root/rust"
+
+echo "== optimizer bench =="
+cargo bench --bench optimizer
+
+echo "== epoch bench =="
+BENCH_EPOCH_JSON="$repo_root/BENCH_epoch.json" cargo bench --bench epoch
+
+echo "results: $repo_root/BENCH_epoch.json"
