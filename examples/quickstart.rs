@@ -46,12 +46,17 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // 4. Evaluate: filtered MRR / Hits@k on the test split.
-    let filter = FilterIndex::build(&graph);
-    let m = eval::evaluate(&runtime, &manifest, &trainer.params, &graph, &filter, &graph.test)?;
+    // 4. Evaluate: filtered MRR / Hits@k on the test split. Set
+    //    `eval.host_threads > 0` to rank chunks on a host pool while the
+    //    next chunk's scores execute (bit-identical metrics either way).
+    let filter = FilterIndex::build(&graph)?;
+    let ecfg = kgscale::config::EvalConfig { host_threads: 2, prefetch_depth: 2 };
+    let mut evaluator = eval::Evaluator::new(&manifest, &graph, &ecfg)?;
+    let (m, stats) =
+        evaluator.evaluate(&runtime, &manifest, &trainer.params, &filter, &graph.test)?;
     println!(
-        "test: MRR={:.4} Hits@1={:.4} Hits@10={:.4} ({} ranked queries)",
-        m.mrr, m.hits1, m.hits10, m.num_queries
+        "test: MRR={:.4} Hits@1={:.4} Hits@10={:.4} ({} ranked queries, eval {:.3}s)",
+        m.mrr, m.hits1, m.hits10, m.num_queries, stats.wall_secs
     );
     Ok(())
 }

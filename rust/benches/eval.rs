@@ -1,0 +1,276 @@
+//! Bench: filtered-rank throughput on the overlapped eval path.
+//!
+//! Part A (always runs): rank a synthetic score stream sequentially vs
+//! through [`EvalPipeline`] at tiny/small scales — the same coordinator
+//! fill + pool rank fan-out `Evaluator` uses, minus XLA. Verifies the
+//! two paths are bit-identical and that per-chunk score readback reuses
+//! the rotating slot buffers (zero per-chunk heap allocation: at most
+//! `prefetch_depth` distinct (ptr, capacity) pairs ever observed).
+//! Part B (needs `make artifacts`): full `Evaluator::evaluate` wall
+//! time, sequential (`eval.host_threads = 0`) vs overlapped, with the
+//! rank-stall and overlap-efficiency metrics the trainer reports.
+//!
+//! Writes a machine-readable summary to `BENCH_eval.json` (path
+//! overridable via the `BENCH_EVAL_JSON` env var) for
+//! `scripts/run_benches.sh`.
+
+use kgscale::config::{EvalConfig, ExperimentConfig};
+use kgscale::eval::{build_queries, Evaluator, FilterIndex, Query, RankMetrics};
+use kgscale::eval::{filtered_rank_sorting, EvalPipeline};
+use kgscale::graph::generator;
+use kgscale::model::Manifest;
+use kgscale::runtime::Runtime;
+use kgscale::util::bench::{bench, BenchResult};
+use kgscale::util::json::Json;
+use kgscale::util::pool::HostPool;
+use std::collections::HashSet;
+use std::path::Path;
+use std::sync::Arc;
+
+const Q_PAD: usize = 128;
+const DEPTH: usize = 2;
+
+/// Deterministic synthetic score (coarse-quantized: plenty of ties).
+fn synth_score(qi: usize, c: usize) -> f32 {
+    ((qi.wrapping_mul(31) ^ c.wrapping_mul(17)) % 97) as f32 * 0.5 - 10.0
+}
+
+/// Write one chunk of synthetic scores into `buf` (n_pad == n_ent here).
+fn fill_chunk(buf: &mut Vec<f32>, start: usize, len: usize, n_ent: usize) {
+    buf.resize(Q_PAD * n_ent, 0.0);
+    for i in 0..len {
+        let row = &mut buf[i * n_ent..(i + 1) * n_ent];
+        for (c, v) in row.iter_mut().enumerate() {
+            *v = synth_score(start + i, c);
+        }
+    }
+}
+
+/// Sequential reference: fill + rank every chunk on this thread.
+fn rank_sequential(
+    queries: &[Query],
+    filter: &FilterIndex,
+    n_ent: usize,
+    scores: &mut Vec<f32>,
+    scratch: &mut Vec<u32>,
+) -> RankMetrics {
+    let mut m = RankMetrics::default();
+    let mut start = 0;
+    while start < queries.len() {
+        let len = Q_PAD.min(queries.len() - start);
+        fill_chunk(scores, start, len, n_ent);
+        for (i, q) in queries[start..start + len].iter().enumerate() {
+            let row = &scores[i * n_ent..(i + 1) * n_ent];
+            let known = if q.tail_dir {
+                filter.known_tails(q.anchor, q.r)
+            } else {
+                filter.known_heads(q.anchor, q.r)
+            };
+            m.fold(filtered_rank_sorting(row, q.truth, known, scratch));
+        }
+        start += len;
+    }
+    m.finalize();
+    m
+}
+
+/// Overlapped path: coordinator fills chunk s+1 while the pool ranks
+/// chunk s. Returns the metrics plus every (ptr, capacity) the slot
+/// buffers ever showed — the zero-per-chunk-allocation evidence.
+fn rank_overlapped(
+    pool: &HostPool,
+    queries: &Arc<Vec<Query>>,
+    filter: &FilterIndex,
+    n_ent: usize,
+) -> (RankMetrics, HashSet<(usize, usize)>) {
+    let mut pipe = EvalPipeline::new(
+        pool,
+        Arc::clone(queries),
+        filter.clone(),
+        Q_PAD,
+        n_ent,
+        n_ent,
+        DEPTH,
+    );
+    let mut m = RankMetrics::default();
+    let mut bufs = HashSet::new();
+    let mut start = 0;
+    while start < queries.len() {
+        let len = Q_PAD.min(queries.len() - start);
+        pipe.submit_chunk(start, len, &mut m, |buf| {
+            fill_chunk(buf, start, len, n_ent);
+            bufs.insert((buf.as_ptr() as usize, buf.capacity()));
+            Ok(())
+        })
+        .expect("synthetic chunk");
+        start += len;
+    }
+    pipe.finish(&mut m);
+    m.finalize();
+    (m, bufs)
+}
+
+fn json_result(r: &BenchResult, queries: usize) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(r.name.clone())),
+        ("mean_secs", Json::Num(r.mean_secs)),
+        ("std_secs", Json::Num(r.std_secs)),
+        ("min_secs", Json::Num(r.min_secs)),
+        ("iters", Json::Num(r.iters as f64)),
+        ("queries_per_sec", Json::Num(queries as f64 / r.mean_secs.max(1e-12))),
+    ])
+}
+
+/// Part A: synthetic-score ranking, no XLA artifacts needed.
+fn bench_rank_path(results: &mut Vec<Json>) {
+    let tiny = ExperimentConfig::tiny().dataset;
+    let mut small = tiny.clone();
+    small.name = "small".into();
+    small.entities = 1500;
+    small.train_edges = 6000;
+    small.valid_edges = 300;
+    small.test_edges = 600;
+
+    for dcfg in [tiny, small] {
+        let g = generator::generate(&dcfg);
+        let filter = FilterIndex::build(&g).unwrap();
+        let queries = Arc::new(build_queries(&g.test));
+        let n_ent = g.num_entities;
+        println!(
+            "== filtered-rank path ({}, {} queries x {} entities) ==",
+            dcfg.name,
+            queries.len(),
+            n_ent
+        );
+
+        let mut scores = Vec::new();
+        let mut scratch = Vec::new();
+        let want = rank_sequential(&queries, &filter, n_ent, &mut scores, &mut scratch);
+        let seq = bench(&format!("rank/{}/sequential", dcfg.name), 0.5, || {
+            let m = rank_sequential(&queries, &filter, n_ent, &mut scores, &mut scratch);
+            std::hint::black_box(m.mrr);
+        });
+        println!(
+            "{:<26} {:>10.2} q/s",
+            seq.name,
+            queries.len() as f64 / seq.mean_secs.max(1e-12)
+        );
+        results.push(json_result(&seq, queries.len()));
+
+        for threads in [2usize, 4] {
+            let pool = HostPool::new(threads);
+            // Correctness pass outside the timing loop: bit-identical
+            // metrics, and slot buffers never reallocate per chunk.
+            let (got, bufs) = rank_overlapped(&pool, &queries, &filter, n_ent);
+            assert_eq!(
+                got.mrr.to_bits(),
+                want.mrr.to_bits(),
+                "overlapped ranking must be bit-identical to sequential"
+            );
+            assert_eq!(got.hits10.to_bits(), want.hits10.to_bits());
+            assert_eq!(got.num_queries, want.num_queries);
+            let chunks = queries.len().div_ceil(Q_PAD);
+            assert!(
+                bufs.len() <= DEPTH,
+                "score readback must reuse <= {DEPTH} slot buffers across {chunks} \
+                 chunks, saw {} distinct (ptr, capacity) pairs",
+                bufs.len()
+            );
+            let r = bench(&format!("rank/{}/pool-{threads}", dcfg.name), 0.5, || {
+                let (m, _) = rank_overlapped(&pool, &queries, &filter, n_ent);
+                std::hint::black_box(m.mrr);
+            });
+            println!(
+                "{:<26} {:>10.2} q/s ({:.2}x vs sequential)",
+                r.name,
+                queries.len() as f64 / r.mean_secs.max(1e-12),
+                seq.mean_secs / r.mean_secs.max(1e-12)
+            );
+            results.push(json_result(&r, queries.len()));
+        }
+        println!();
+    }
+}
+
+/// Part B: full Evaluator (encode + score + rank) over real artifacts.
+fn bench_evaluator(results: &mut Vec<Json>) {
+    let dir = Path::new("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP evaluator bench: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(dir).unwrap();
+    let runtime = Runtime::new(dir).unwrap();
+    let cfg = ExperimentConfig::tiny();
+    let g = generator::generate(&cfg.dataset);
+    let filter = FilterIndex::build(&g).unwrap();
+    let params = kgscale::model::init_params(&manifest, 1);
+
+    println!("== Evaluator: sequential vs overlapped rank pool ==");
+    println!(
+        "{:<24} {:>10} {:>10} {:>10} {:>10}",
+        "config", "eval wall", "score", "rank stall", "overlap"
+    );
+    let mut ref_bits = None;
+    for threads in [0usize, 2] {
+        let ecfg = EvalConfig { host_threads: threads, prefetch_depth: DEPTH };
+        let mut ev = Evaluator::new(&manifest, &g, &ecfg).unwrap();
+        // Warm pass (artifact compile, buffer growth) before measuring;
+        // also the bit-identity checkpoint between the two configs.
+        let (m, _) = ev.evaluate(&runtime, &manifest, &params, &filter, &g.test).unwrap();
+        match ref_bits {
+            None => ref_bits = Some(m.mrr.to_bits()),
+            Some(b) => assert_eq!(
+                b,
+                m.mrr.to_bits(),
+                "overlapped Evaluator must be bit-identical to sequential"
+            ),
+        }
+        let evals = 3;
+        let (mut wall, mut score, mut stall, mut overlap) = (0.0, 0.0, 0.0, 0.0);
+        for _ in 0..evals {
+            let (_, s) = ev.evaluate(&runtime, &manifest, &params, &filter, &g.test).unwrap();
+            wall += s.wall_secs;
+            score += s.score_secs;
+            stall += s.rank_stall_secs;
+            overlap += s.overlap_efficiency;
+        }
+        let n = evals as f64;
+        let name = if threads == 0 {
+            "evaluate/sequential".to_string()
+        } else {
+            format!("evaluate/pool-{threads}")
+        };
+        println!(
+            "{:<24} {:>9.4}s {:>9.4}s {:>9.4}s {:>10.2}",
+            name,
+            wall / n,
+            score / n,
+            stall / n,
+            overlap / n
+        );
+        results.push(Json::obj(vec![
+            ("name", Json::Str(name)),
+            ("host_threads", Json::Num(threads as f64)),
+            ("eval_wall_secs", Json::Num(wall / n)),
+            ("score_secs", Json::Num(score / n)),
+            ("rank_stall_secs", Json::Num(stall / n)),
+            ("overlap_efficiency", Json::Num(overlap / n)),
+        ]));
+    }
+}
+
+fn main() {
+    let mut results = Vec::new();
+    bench_rank_path(&mut results);
+    bench_evaluator(&mut results);
+    let out = Json::obj(vec![
+        ("bench", Json::Str("eval".to_string())),
+        ("tier", Json::Str("tiny".to_string())),
+        ("results", Json::Arr(results)),
+    ]);
+    let path =
+        std::env::var("BENCH_EVAL_JSON").unwrap_or_else(|_| "BENCH_eval.json".to_string());
+    std::fs::write(&path, out.to_string_pretty()).expect("write bench json");
+    println!("wrote {path}");
+}

@@ -6,11 +6,16 @@
 //! of 10k / 100k / 1M rows with a fixed batch-scale touched set, and
 //! prints the resulting speedups (the acceptance bar is >= 5x for the
 //! sparse path at >= 100k rows).
+//!
+//! Writes a machine-readable summary to `BENCH_optimizer.json` (path
+//! overridable via the `BENCH_OPTIMIZER_JSON` env var) for
+//! `scripts/run_benches.sh`.
 
 use kgscale::model::EmbeddingSegment;
 use kgscale::train::optimizer::Adam;
 use kgscale::train::sparse::SparseGrad;
 use kgscale::util::bench::{bench, BenchResult};
+use kgscale::util::json::Json;
 use kgscale::util::rng::Rng;
 
 const DIM: usize = 16;
@@ -52,7 +57,18 @@ fn speedup(dense: &BenchResult, sparse: &BenchResult) -> f64 {
     dense.mean_secs / sparse.mean_secs.max(1e-12)
 }
 
+fn json_result(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(r.name.clone())),
+        ("mean_secs", Json::Num(r.mean_secs)),
+        ("std_secs", Json::Num(r.std_secs)),
+        ("min_secs", Json::Num(r.min_secs)),
+        ("iters", Json::Num(r.iters as f64)),
+    ])
+}
+
 fn main() {
+    let mut results = Vec::new();
     println!("== gradient path bench: dense vs row-sparse ==");
     println!(
         "dim={DIM}, dense tail={TAIL}, touched rows/batch={TOUCHED} (batch-scale \
@@ -115,5 +131,31 @@ fn main() {
             speedup(&d_step, &sp_mode),
         );
         println!();
+        for r in [&d_acc, &s_acc, &d_step, &sp_mode, &s_step] {
+            results.push(json_result(r));
+        }
+        results.push(Json::obj(vec![
+            ("name", Json::Str(format!("speedup/{label}"))),
+            ("accumulate", Json::Num(speedup(&d_acc, &s_acc))),
+            ("lazy_step", Json::Num(speedup(&d_step, &s_step))),
+            ("full_step", Json::Num(dense_total / lazy_total.max(1e-12))),
+            ("sparse_dense_adam_step", Json::Num(speedup(&d_step, &sp_mode))),
+        ]));
     }
+    let out = Json::obj(vec![
+        ("bench", Json::Str("optimizer".to_string())),
+        (
+            "fixture",
+            Json::obj(vec![
+                ("dim", Json::Num(DIM as f64)),
+                ("dense_tail", Json::Num(TAIL as f64)),
+                ("touched_rows", Json::Num(TOUCHED as f64)),
+            ]),
+        ),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = std::env::var("BENCH_OPTIMIZER_JSON")
+        .unwrap_or_else(|_| "BENCH_optimizer.json".to_string());
+    std::fs::write(&path, out.to_string_pretty()).expect("write bench json");
+    println!("wrote {path}");
 }

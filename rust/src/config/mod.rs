@@ -175,6 +175,20 @@ pub struct TrainConfig {
     pub prefetch_depth: usize,
 }
 
+/// Evaluation-path knobs (`eval::pipeline`), symmetric with the train
+/// pipeline's `host_threads`/`prefetch_depth` pair.
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    /// Host threads computing filtered ranks while the coordinator
+    /// executes the next score chunk. 0 = sequential reference path.
+    /// MRR/Hits@k are bit-identical either way.
+    pub host_threads: usize,
+    /// Score-readback slots rotated by the overlapped path (1 = no
+    /// lookahead, 2 = double buffering). Must be >= 1; only takes
+    /// effect with `host_threads > 0`.
+    pub prefetch_depth: usize,
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PartitionStrategy {
     /// High-Degree Replicated First streaming vertex-cut (KaHIP-substitute).
@@ -245,6 +259,7 @@ pub struct ExperimentConfig {
     pub dataset: DatasetConfig,
     pub model: ModelConfig,
     pub train: TrainConfig,
+    pub eval: EvalConfig,
     pub partition: PartitionConfig,
     pub network: NetworkConfig,
     pub runtime: RuntimeConfig,
@@ -292,6 +307,7 @@ impl ExperimentConfig {
                 host_threads: 0,
                 prefetch_depth: 2,
             },
+            eval: EvalConfig { host_threads: 0, prefetch_depth: 2 },
             partition: PartitionConfig {
                 strategy: PartitionStrategy::Hdrf,
                 num_partitions: 1,
@@ -359,6 +375,9 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_str("train.grad_mode") {
             cfg.train.grad_mode = GradMode::from_str(v)?;
         }
+        // eval
+        set_usize(&doc, "eval.host_threads", &mut cfg.eval.host_threads);
+        set_usize(&doc, "eval.prefetch_depth", &mut cfg.eval.prefetch_depth);
         // partition
         if let Some(v) = doc.get_str("partition.strategy") {
             cfg.partition.strategy = PartitionStrategy::from_str(v)?;
@@ -424,6 +443,16 @@ impl ExperimentConfig {
                 "train.host_threads = {} is not a plausible host thread count \
                  (use 0 for the sequential path)",
                 self.train.host_threads
+            );
+        }
+        if self.eval.prefetch_depth == 0 {
+            bail!("eval.prefetch_depth must be >= 1 (2 = double buffering)");
+        }
+        if self.eval.host_threads > 256 {
+            bail!(
+                "eval.host_threads = {} is not a plausible host thread count \
+                 (use 0 for the sequential path)",
+                self.eval.host_threads
             );
         }
         Ok(())
@@ -561,6 +590,25 @@ num_partitions = 4
             .unwrap_err()
             .to_string();
         assert!(err.contains("host_threads"), "got: {err}");
+    }
+
+    #[test]
+    fn eval_pipeline_keys_parse_and_validate() {
+        let toml = "[eval]\nhost_threads = 4\nprefetch_depth = 3\n";
+        let cfg = ExperimentConfig::from_toml_str(toml).unwrap();
+        assert_eq!(cfg.eval.host_threads, 4);
+        assert_eq!(cfg.eval.prefetch_depth, 3);
+        // Defaults: sequential reference path, double buffering.
+        assert_eq!(ExperimentConfig::tiny().eval.host_threads, 0);
+        assert_eq!(ExperimentConfig::tiny().eval.prefetch_depth, 2);
+        let err = ExperimentConfig::from_toml_str("[eval]\nprefetch_depth = 0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("eval.prefetch_depth"), "got: {err}");
+        let err = ExperimentConfig::from_toml_str("[eval]\nhost_threads = 100000\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("eval.host_threads"), "got: {err}");
     }
 
     #[test]

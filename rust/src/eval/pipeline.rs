@@ -1,0 +1,306 @@
+//! Overlapped evaluation: XLA scoring pipelined with host-side ranking.
+//!
+//! Mirrors the `train::pipeline` design. The PJRT runtime is not `Send`,
+//! so artifact execution stays pinned to the coordinator thread; the
+//! host-side half of eval — filtered-rank counting over `[q_pad, n_pad]`
+//! score chunks — is plain data and moves onto the shared [`HostPool`].
+//! While the coordinator executes the score artifact for chunk *s+1*,
+//! pool threads rank chunk *s*, its queries striped across threads.
+//!
+//! Score readback rotates through `depth` (= `eval.prefetch_depth`)
+//! slots, each owning one reusable `Vec<f32>` filled in place via
+//! `literal_to_f32_into` — zero per-chunk heap allocation after warmup.
+//! Before a slot is reused, the chunk previously occupying it is
+//! *retired*: the coordinator waits for its stripe jobs (that wait is
+//! the rank-stall time) and folds its ranks into the metrics in chunk
+//! order, query order. Ranks are integers, so the fold is bit-identical
+//! to the sequential `eval.host_threads = 0` reference no matter how
+//! stripes interleave.
+//!
+//! Buffer-reclaim protocol: each stripe job drops its `Arc` clone of the
+//! slot's score buffer *before* reporting done, so once the coordinator
+//! has received every done message for the retiring chunk it holds the
+//! only reference and `Arc::get_mut` must succeed.
+
+use super::rank;
+use super::{FilterIndex, Query, RankMetrics};
+use crate::util::pool::HostPool;
+use crate::util::timer::Stopwatch;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// One stripe job finished ranking its share of `chunk`.
+struct StripeDone {
+    chunk: usize,
+    busy_secs: f64,
+}
+
+/// One rotating readback slot (see module docs).
+struct Slot {
+    /// Reused `[q_pad * n_pad]` score readback buffer.
+    scores: Arc<Vec<f32>>,
+    /// Per-query rank outputs; stripe `w` writes indices `w, w+s, ...`.
+    ranks: Arc<Vec<AtomicU32>>,
+    /// Live queries in the chunk currently occupying the slot.
+    len: usize,
+    /// Stripe jobs not yet reported done for the occupying chunk.
+    pending: usize,
+}
+
+/// Coordinator-side state for the overlapped eval path.
+///
+/// Usage: one `submit_chunk` call per `[q_pad]` query chunk, passing a
+/// `fill` closure that writes that chunk's scores into the slot buffer
+/// (in production `literal_to_f32_into` from the score artifact; tests
+/// and benches substitute synthetic scores), then one `finish` call to
+/// drain. Metrics accumulate into the caller's [`RankMetrics`]; call
+/// `RankMetrics::finalize` afterwards.
+pub struct EvalPipeline<'a> {
+    pool: &'a HostPool,
+    queries: Arc<Vec<Query>>,
+    filter: FilterIndex,
+    n_pad: usize,
+    n_ent: usize,
+    depth: usize,
+    slots: Vec<Slot>,
+    done_tx: mpsc::Sender<StripeDone>,
+    done_rx: mpsc::Receiver<StripeDone>,
+    /// Next chunk index to fold into metrics (chunks retire in order).
+    next_retire: usize,
+    /// Chunks submitted so far; doubles as the next chunk index.
+    submitted: usize,
+    /// Total seconds pool threads spent ranking (summed across stripes).
+    pub rank_busy_secs: f64,
+    /// Seconds the coordinator spent blocked waiting on stripe jobs.
+    pub stall_secs: f64,
+}
+
+impl<'a> EvalPipeline<'a> {
+    pub fn new(
+        pool: &'a HostPool,
+        queries: Arc<Vec<Query>>,
+        filter: FilterIndex,
+        q_pad: usize,
+        n_pad: usize,
+        n_ent: usize,
+        depth: usize,
+    ) -> EvalPipeline<'a> {
+        assert!(depth >= 1, "prefetch depth must be at least 1");
+        assert!(n_ent <= n_pad, "entity count exceeds score row padding");
+        let slots = (0..depth)
+            .map(|_| Slot {
+                scores: Arc::new(Vec::new()), // grown once by the first fill
+                ranks: Arc::new((0..q_pad).map(|_| AtomicU32::new(0)).collect()),
+                len: 0,
+                pending: 0,
+            })
+            .collect();
+        let (done_tx, done_rx) = mpsc::channel();
+        EvalPipeline {
+            pool,
+            queries,
+            filter,
+            n_pad,
+            n_ent,
+            depth,
+            slots,
+            done_tx,
+            done_rx,
+            next_retire: 0,
+            submitted: 0,
+            rank_busy_secs: 0.0,
+            stall_secs: 0.0,
+        }
+    }
+
+    /// Score-and-rank one chunk: queries `[start, start + len)`.
+    ///
+    /// Retires the chunk previously occupying this slot (if any), fills
+    /// the slot's score buffer via `fill`, and fans the chunk's rank
+    /// work out across the pool. Returns without waiting for the rank
+    /// jobs — the caller proceeds to execute the next chunk's scores.
+    pub fn submit_chunk(
+        &mut self,
+        start: usize,
+        len: usize,
+        metrics: &mut RankMetrics,
+        fill: impl FnOnce(&mut Vec<f32>) -> Result<()>,
+    ) -> Result<()> {
+        let chunk = self.submitted;
+        while self.next_retire + self.depth <= chunk {
+            self.retire_next(metrics);
+        }
+        let idx = chunk % self.depth;
+        {
+            let slot = &mut self.slots[idx];
+            let buf = Arc::get_mut(&mut slot.scores)
+                .expect("score buffer still shared after retire");
+            fill(buf)?;
+            anyhow::ensure!(
+                buf.len() >= len * self.n_pad,
+                "score chunk holds {} floats, need {}",
+                buf.len(),
+                len * self.n_pad
+            );
+            slot.len = len;
+        }
+        let stripes = self.pool.threads().min(len).max(1);
+        self.slots[idx].pending = stripes;
+        for w in 0..stripes {
+            let scores = Arc::clone(&self.slots[idx].scores);
+            let ranks = Arc::clone(&self.slots[idx].ranks);
+            let queries = Arc::clone(&self.queries);
+            let filter = self.filter.clone();
+            let tx = self.done_tx.clone();
+            let (n_pad, n_ent) = (self.n_pad, self.n_ent);
+            self.pool.submit(move || {
+                let sw = Stopwatch::new();
+                for i in (w..len).step_by(stripes) {
+                    let q = &queries[start + i];
+                    let row = &scores[i * n_pad..i * n_pad + n_ent];
+                    let known = if q.tail_dir {
+                        filter.known_tails(q.anchor, q.r)
+                    } else {
+                        filter.known_heads(q.anchor, q.r)
+                    };
+                    let rank = rank::with_scratch(|scratch| {
+                        rank::filtered_rank_sorting(row, q.truth, known, scratch)
+                    });
+                    ranks[i].store(rank as u32, Ordering::Relaxed);
+                }
+                let busy_secs = sw.elapsed_secs();
+                // Release the buffer BEFORE reporting done — the
+                // coordinator reclaims it with Arc::get_mut once the
+                // last done message for this chunk arrives.
+                drop(scores);
+                let _ = tx.send(StripeDone { chunk, busy_secs });
+            });
+        }
+        self.submitted += 1;
+        Ok(())
+    }
+
+    /// Retire chunk `next_retire`: wait for its stripes, fold its ranks.
+    fn retire_next(&mut self, metrics: &mut RankMetrics) {
+        let idx = self.next_retire % self.depth;
+        if self.slots[idx].pending > 0 {
+            let sw = Stopwatch::new();
+            while self.slots[idx].pending > 0 {
+                let done = self.done_rx.recv().expect("rank stripe panicked");
+                self.slots[done.chunk % self.depth].pending -= 1;
+                self.rank_busy_secs += done.busy_secs;
+            }
+            self.stall_secs += sw.elapsed_secs();
+        }
+        // The channel recv synchronizes with each stripe's send, so the
+        // Relaxed rank stores below are visible. Fold in query order:
+        // identical accumulation order to the sequential reference.
+        let slot = &self.slots[idx];
+        for r in slot.ranks.iter().take(slot.len) {
+            metrics.fold(r.load(Ordering::Relaxed) as usize);
+        }
+        self.next_retire += 1;
+    }
+
+    /// Drain every in-flight chunk into `metrics`.
+    pub fn finish(&mut self, metrics: &mut RankMetrics) {
+        while self.next_retire < self.submitted {
+            self.retire_next(metrics);
+        }
+    }
+
+    /// Fraction of pool ranking time hidden under coordinator execution
+    /// (1.0 = fully overlapped), mirroring the trainer's definition.
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.rank_busy_secs <= 0.0 {
+            return 1.0;
+        }
+        ((self.rank_busy_secs - self.stall_secs) / self.rank_busy_secs).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::eval::build_queries;
+    use crate::graph::generator;
+
+    /// Deterministic synthetic score: coarse quantization produces many
+    /// ties, exercising the strictly-better protocol under threading.
+    fn synth_score(qi: usize, c: usize) -> f32 {
+        ((qi.wrapping_mul(31) ^ c.wrapping_mul(17)) % 97) as f32 * 0.5 - 10.0
+    }
+
+    #[test]
+    fn overlapped_fold_bit_identical_to_sequential() {
+        let g = generator::generate(&ExperimentConfig::tiny().dataset);
+        let filter = FilterIndex::build(&g).unwrap();
+        let queries = Arc::new(build_queries(&g.test));
+        let n_ent = g.num_entities;
+        let (q_pad, n_pad) = (64, n_ent + 24);
+
+        // Sequential reference: same kernel, same fold order.
+        let mut want = RankMetrics::default();
+        let mut scratch = Vec::new();
+        let mut row = vec![0.0f32; n_ent];
+        for (qi, q) in queries.iter().enumerate() {
+            for (c, slot) in row.iter_mut().enumerate() {
+                *slot = synth_score(qi, c);
+            }
+            let known = if q.tail_dir {
+                filter.known_tails(q.anchor, q.r)
+            } else {
+                filter.known_heads(q.anchor, q.r)
+            };
+            want.fold(rank::filtered_rank_sorting(&row, q.truth, known, &mut scratch));
+        }
+        want.finalize();
+
+        for (threads, depth) in [(1, 1), (2, 2), (4, 3)] {
+            let pool = HostPool::new(threads);
+            let mut pipe = EvalPipeline::new(
+                &pool,
+                Arc::clone(&queries),
+                filter.clone(),
+                q_pad,
+                n_pad,
+                n_ent,
+                depth,
+            );
+            let mut got = RankMetrics::default();
+            let mut buf_ptrs = std::collections::HashSet::new();
+            let mut start = 0;
+            while start < queries.len() {
+                let len = q_pad.min(queries.len() - start);
+                pipe.submit_chunk(start, len, &mut got, |buf| {
+                    buf.resize(q_pad * n_pad, f32::NEG_INFINITY);
+                    for i in 0..len {
+                        for c in 0..n_ent {
+                            buf[i * n_pad + c] = synth_score(start + i, c);
+                        }
+                    }
+                    buf_ptrs.insert(buf.as_ptr() as usize);
+                    Ok(())
+                })
+                .unwrap();
+                start += len;
+            }
+            pipe.finish(&mut got);
+            got.finalize();
+            assert_eq!(got.num_queries, want.num_queries);
+            assert_eq!(got.mrr.to_bits(), want.mrr.to_bits(), "threads={threads}");
+            assert_eq!(got.hits1.to_bits(), want.hits1.to_bits());
+            assert_eq!(got.hits3.to_bits(), want.hits3.to_bits());
+            assert_eq!(got.hits10.to_bits(), want.hits10.to_bits());
+            // Readback scratch rotates through at most `depth` buffers.
+            assert!(
+                buf_ptrs.len() <= depth,
+                "expected <= {depth} score buffers, saw {}",
+                buf_ptrs.len()
+            );
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Pure filtered-rank kernel, independent of any runtime.
+//!
+//! The old `rank_triples` loop made two passes per query: count every
+//! candidate strictly above the truth score, then subtract the known
+//! positives that outscored it. This module fuses the two into a single
+//! pass with a merge pointer into a *sorted* known-candidate list: known
+//! candidates (other than the truth itself) are skipped instead of
+//! counted-then-subtracted. Besides touching each score exactly once,
+//! the fused form is robust to duplicate entries in the known list —
+//! the old subtract pass would discount a duplicate twice (and could
+//! underflow), while skipping naturally deduplicates.
+//!
+//! Ranks are plain integers, so they are exact: any schedule that
+//! computes per-query ranks and folds them into [`RankMetrics`] in the
+//! same query order is bit-identical to the sequential reference. This
+//! is the property the overlapped eval pipeline relies on.
+//!
+//! [`RankMetrics`]: super::RankMetrics
+
+use std::cell::RefCell;
+
+/// Filtered rank of `truth` within `row` (scores for candidates
+/// `0..row.len()`), with known positives removed from the ranking.
+///
+/// `known_sorted` must be sorted ascending (duplicates allowed). The
+/// rank is `1 + |{c : row[c] > row[truth], c not known-or-c == truth}|`
+/// — strictly-better counting, so ties with the truth score do not hurt
+/// the rank (the standard optimistic filtered protocol, matching the
+/// previous implementation bit for bit).
+pub fn filtered_rank(row: &[f32], truth: u32, known_sorted: &[u32]) -> usize {
+    debug_assert!(
+        known_sorted.windows(2).all(|w| w[0] <= w[1]),
+        "known candidates must be sorted"
+    );
+    let truth_score = row[truth as usize];
+    let mut better = 0usize;
+    let mut k = 0usize;
+    for (c, &sc) in row.iter().enumerate() {
+        let c = c as u32;
+        while k < known_sorted.len() && known_sorted[k] < c {
+            k += 1;
+        }
+        if k < known_sorted.len() && known_sorted[k] == c && c != truth {
+            continue; // known positive: filtered out of the ranking
+        }
+        if sc > truth_score {
+            better += 1;
+        }
+    }
+    better + 1
+}
+
+/// [`filtered_rank`] for an *unsorted* known list, sorting into a
+/// caller-provided scratch buffer so repeated calls allocate nothing
+/// once the scratch has grown to the largest known-list size.
+pub fn filtered_rank_sorting(
+    row: &[f32],
+    truth: u32,
+    known: &[u32],
+    scratch: &mut Vec<u32>,
+) -> usize {
+    scratch.clear();
+    scratch.extend_from_slice(known);
+    scratch.sort_unstable();
+    filtered_rank(row, truth, scratch)
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Vec<u32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with this thread's persistent rank scratch buffer. Pool
+/// threads use this so each keeps one long-lived sort buffer instead of
+/// allocating per query.
+pub fn with_scratch<R>(f: impl FnOnce(&mut Vec<u32>) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn truth_is_best_ranks_first() {
+        let row = [0.1, 0.9, 0.3, 0.2];
+        assert_eq!(filtered_rank(&row, 1, &[]), 1);
+    }
+
+    #[test]
+    fn ties_do_not_count_against_the_truth() {
+        // Strictly-better counting: equal scores leave the rank alone.
+        let row = [2.0, 2.0, 2.0, 3.0];
+        assert_eq!(filtered_rank(&row, 0, &[]), 2); // only 3.0 beats it
+    }
+
+    #[test]
+    fn known_positives_that_outrank_are_filtered() {
+        let row = [0.5, 0.9, 0.8, 0.1];
+        // Unfiltered, two candidates beat truth=3; both are known.
+        assert_eq!(filtered_rank(&row, 3, &[1, 2]), 2); // 0.5 still beats 0.1
+        assert_eq!(filtered_rank(&row, 3, &[0, 1, 2]), 1); // all outrankers known
+    }
+
+    #[test]
+    fn truth_in_known_list_does_not_filter_itself() {
+        let row = [0.5, 0.9, 0.8, 0.1];
+        assert_eq!(filtered_rank(&row, 1, &[1]), 1);
+        assert_eq!(filtered_rank(&row, 2, &[1, 2]), 1); // 0.9 filtered, truth kept
+    }
+
+    #[test]
+    fn duplicate_known_entries_filter_once() {
+        let row = [0.5, 0.9, 0.8, 0.1];
+        // The old two-pass kernel would subtract candidate 1 twice here.
+        assert_eq!(filtered_rank(&row, 3, &[1, 1, 1, 2]), 2);
+    }
+
+    #[test]
+    fn sorting_wrapper_matches_presorted() {
+        let mut rng = Rng::seeded(0x8a11);
+        let mut scratch = Vec::new();
+        for _ in 0..200 {
+            let n = 1 + rng.below(64);
+            let row: Vec<f32> = (0..n).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+            let truth = rng.below(n) as u32;
+            let known: Vec<u32> = (0..rng.below(16)).map(|_| rng.below(n) as u32).collect();
+            let mut sorted = known.clone();
+            sorted.sort_unstable();
+            assert_eq!(
+                filtered_rank_sorting(&row, truth, &known, &mut scratch),
+                filtered_rank(&row, truth, &sorted),
+            );
+        }
+    }
+
+    #[test]
+    fn fused_matches_two_pass_reference() {
+        // Reference: the pre-fusion algorithm (with deduped knowns so
+        // both sides agree; the fused kernel dedups by construction).
+        fn two_pass(row: &[f32], truth: u32, known: &[u32]) -> usize {
+            let truth_score = row[truth as usize];
+            let mut better = row.iter().filter(|&&sc| sc > truth_score).count();
+            for &k in known {
+                if k != truth && row[k as usize] > truth_score {
+                    better -= 1;
+                }
+            }
+            better + 1
+        }
+        let mut rng = Rng::seeded(0xfade);
+        for _ in 0..500 {
+            let n = 1 + rng.below(128);
+            let row: Vec<f32> = (0..n).map(|_| rng.uniform_f32(-2.0, 2.0)).collect();
+            let truth = rng.below(n) as u32;
+            let mut known: Vec<u32> = (0..rng.below(20)).map(|_| rng.below(n) as u32).collect();
+            known.sort_unstable();
+            known.dedup();
+            assert_eq!(filtered_rank(&row, truth, &known), two_pass(&row, truth, &known));
+        }
+    }
+}

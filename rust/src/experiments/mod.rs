@@ -91,9 +91,12 @@ pub fn table3_sweep(
     eval_every: usize,
     eval_triples_cap: usize,
 ) -> Result<(Table, Vec<Table3Row>)> {
-    let filter = FilterIndex::build(graph);
+    let filter = FilterIndex::build(graph)?;
     let test: Vec<_> =
         graph.test.iter().take(eval_triples_cap.max(1)).copied().collect();
+    // One evaluator for the whole sweep: the padded encode inputs and
+    // the rank pool (eval.host_threads) are built once, not per eval.
+    let mut evaluator = eval::Evaluator::new(manifest, graph, &cfg.eval)?;
     let mut rows = Vec::new();
     for &p in trainer_counts {
         let mut c = cfg.clone();
@@ -114,14 +117,14 @@ pub fn table3_sweep(
                 humanize_secs(rec.wall_secs)
             );
             if eval_every > 0 && (e + 1) % eval_every == 0 && e + 1 < epochs {
-                let m = eval::evaluate(
-                    runtime, manifest, &trainer.params, graph, &filter, &test,
-                )?;
-                trainer.record_eval(m.mrr);
+                let (m, stats) =
+                    evaluator.evaluate(runtime, manifest, &trainer.params, &filter, &test)?;
+                trainer.record_eval_stats(m.mrr, &stats);
             }
         }
-        let m = eval::evaluate(runtime, manifest, &trainer.params, graph, &filter, &test)?;
-        trainer.record_eval(m.mrr);
+        let (m, stats) =
+            evaluator.evaluate(runtime, manifest, &trainer.params, &filter, &test)?;
+        trainer.record_eval_stats(m.mrr, &stats);
         rows.push(Table3Row {
             trainers: p,
             mrr: m.mrr,
@@ -283,6 +286,9 @@ pub fn fig6(rows: &[Table3Row], dataset: &str) -> (Figure, Table) {
             "sync KB/step",
             "prefetch stall (s)",
             "overlap eff",
+            "eval wall (s)",
+            "rank stall (s)",
+            "eval overlap",
         ],
     );
     for r in rows {
@@ -299,6 +305,11 @@ pub fn fig6(rows: &[Table3Row], dataset: &str) -> (Figure, Table) {
             // Both 0 on the sequential (host_threads = 0) path.
             format!("{:.4}", last.prefetch_stall_secs),
             format!("{:.2}", last.overlap_efficiency),
+            // Eval columns: the periodic eval that followed the final
+            // epoch; stall/overlap are 0 with eval.host_threads = 0.
+            format!("{:.4}", last.eval_wall_secs),
+            format!("{:.4}", last.eval_rank_stall_secs),
+            format!("{:.2}", last.eval_overlap_efficiency),
         ]);
     }
     (fig, t)
@@ -319,6 +330,33 @@ pub fn fig7(rows: &[Table3Row], dataset: &str) -> Figure {
         );
     }
     fig
+}
+
+/// Figure 7 companion table: every eval point with its timing breakdown
+/// (wall / rank-stall / overlap), so the cost of the periodic evals that
+/// produce the convergence curve is visible next to it.
+pub fn fig7_table(rows: &[Table3Row], dataset: &str) -> Table {
+    let mut t = Table::new(
+        &format!("Figure 7 eval points, {dataset}"),
+        &["#Trainers", "epoch", "virtual s", "MRR", "eval wall (s)", "rank stall (s)", "overlap"],
+    );
+    for r in rows {
+        for (i, &(tv, epoch, mrr)) in r.history.eval_points.iter().enumerate() {
+            // eval_stats parallels eval_points when the run recorded
+            // timings; default (zeros) otherwise.
+            let s = r.history.eval_stats.get(i).copied().unwrap_or_default();
+            t.row(vec![
+                r.trainers.to_string(),
+                epoch.to_string(),
+                format!("{tv:.2}"),
+                format!("{mrr:.3}"),
+                format!("{:.4}", s.wall_secs),
+                format!("{:.4}", s.rank_stall_secs),
+                format!("{:.2}", s.overlap_efficiency),
+            ]);
+        }
+    }
+    t
 }
 
 /// Generate the configured dataset (convenience used by CLI + examples).

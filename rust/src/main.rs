@@ -139,7 +139,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let g = experiments::dataset(&cfg);
     let manifest = Manifest::load(&dir)?;
     let runtime = Runtime::new(&dir)?;
-    let filter = eval::FilterIndex::build(&g);
+    let filter = eval::FilterIndex::build(&g)?;
+    let mut evaluator = eval::Evaluator::new(&manifest, &g, &cfg.eval)?;
     let mut trainer = Trainer::new(cfg.clone(), &g, &runtime, manifest.clone())?;
     log_info!(
         "training {}: P={} epochs={epochs} core edges per worker {:?}",
@@ -159,15 +160,27 @@ fn cmd_train(args: &Args) -> Result<()> {
             rec.avg_sync_step
         );
         if eval_every > 0 && (e + 1) % eval_every == 0 {
-            let m = eval::evaluate(&runtime, &manifest, &trainer.params, &g, &filter, &g.valid)?;
-            trainer.record_eval(m.mrr);
-            println!("  valid MRR={:.4} Hits@1={:.4} Hits@10={:.4}", m.mrr, m.hits1, m.hits10);
+            let (m, stats) =
+                evaluator.evaluate(&runtime, &manifest, &trainer.params, &filter, &g.valid)?;
+            trainer.record_eval_stats(m.mrr, &stats);
+            println!(
+                "  valid MRR={:.4} Hits@1={:.4} Hits@10={:.4} (eval {:.3}s: encode {:.3}s score {:.3}s rank {:.3}s stall {:.3}s overlap {:.2})",
+                m.mrr,
+                m.hits1,
+                m.hits10,
+                stats.wall_secs,
+                stats.encode_secs,
+                stats.score_secs,
+                stats.rank_secs,
+                stats.rank_stall_secs,
+                stats.overlap_efficiency
+            );
         }
     }
-    let m = eval::evaluate(&runtime, &manifest, &trainer.params, &g, &filter, &g.test)?;
+    let (m, stats) = evaluator.evaluate(&runtime, &manifest, &trainer.params, &filter, &g.test)?;
     println!(
-        "TEST: MRR={:.4} Hits@1={:.4} Hits@3={:.4} Hits@10={:.4} ({} queries)",
-        m.mrr, m.hits1, m.hits3, m.hits10, m.num_queries
+        "TEST: MRR={:.4} Hits@1={:.4} Hits@3={:.4} Hits@10={:.4} ({} queries, {} chunks, eval {:.3}s)",
+        m.mrr, m.hits1, m.hits3, m.hits10, m.num_queries, stats.num_chunks, stats.wall_secs
     );
     Ok(())
 }
@@ -221,6 +234,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             out.push_str(&f6b.to_markdown());
             let f7 = experiments::fig7(&rows, &g.name);
             out.push_str(&f7.to_ascii());
+            out.push_str(&experiments::fig7_table(&rows, &g.name).to_markdown());
             report::save_report(&format!("fig6a_{}.csv", cfg.name), &f6a.to_csv())?;
             report::save_report(&format!("fig7_{}.csv", cfg.name), &f7.to_csv())?;
         }

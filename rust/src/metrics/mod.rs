@@ -65,6 +65,40 @@ pub struct EpochRecord {
     /// `(prep_busy - stall) / prep_busy`, clamped to [0, 1]. 0.0 when
     /// the sequential path ran (no concurrent prep to hide).
     pub overlap_efficiency: f64,
+    /// Wall seconds of the periodic evaluation that followed this epoch
+    /// (0.0 when no eval ran after this epoch).
+    pub eval_wall_secs: f64,
+    /// Seconds that eval's coordinator spent blocked waiting on the
+    /// rank pool (0.0 on the sequential `eval.host_threads = 0` path,
+    /// and when no eval ran).
+    pub eval_rank_stall_secs: f64,
+    /// That eval's rank-work overlap efficiency,
+    /// `(rank_busy - stall) / rank_busy` clamped to [0, 1]; 0.0 on the
+    /// sequential path and when no eval ran.
+    pub eval_overlap_efficiency: f64,
+}
+
+/// Timing breakdown of one evaluation pass (wall seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalStats {
+    /// End-to-end wall time: encode + score + rank + fold.
+    pub wall_secs: f64,
+    /// Full-graph encode artifact execution (inputs come from the
+    /// cached `EncodeInputs`, so this is pure XLA time after warmup).
+    pub encode_secs: f64,
+    /// Score artifact execution summed over chunks.
+    pub score_secs: f64,
+    /// Host rank work: coordinator seconds on the sequential path, or
+    /// summed pool-thread busy seconds on the overlapped path.
+    pub rank_secs: f64,
+    /// Coordinator seconds blocked waiting for rank stripes (0.0 on the
+    /// sequential path).
+    pub rank_stall_secs: f64,
+    /// `(rank_secs - rank_stall_secs) / rank_secs` clamped to [0, 1] on
+    /// the overlapped path; 0.0 sequentially (nothing ran concurrently).
+    pub overlap_efficiency: f64,
+    /// Score chunks executed.
+    pub num_chunks: usize,
 }
 
 /// Full run history plus evaluation checkpoints (Figure 7's series).
@@ -73,6 +107,9 @@ pub struct RunHistory {
     pub epochs: Vec<EpochRecord>,
     /// (virtual time at eval, epoch, validation MRR)
     pub eval_points: Vec<(f64, usize, f64)>,
+    /// Timing breakdown of each eval point, parallel to `eval_points`
+    /// (empty for callers that record MRR only).
+    pub eval_stats: Vec<EvalStats>,
 }
 
 impl RunHistory {
@@ -123,6 +160,9 @@ mod tests {
                 avg_sync_bytes: 128.0 * 16.0 * 4.0,
                 prefetch_stall_secs: 0.25,
                 overlap_efficiency: 0.9,
+                eval_wall_secs: 0.0,
+                eval_rank_stall_secs: 0.0,
+                eval_overlap_efficiency: 0.0,
             });
         }
         h.eval_points.push((2.0, 0, 0.1));

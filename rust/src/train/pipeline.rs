@@ -6,8 +6,10 @@
 //! [`Runtime`](crate::runtime::Runtime) is not `Send` and stays pinned to
 //! the coordinator. This module provides the pieces the trainer composes:
 //!
-//! - [`HostPool`]: a persistent `std::thread` pool fed over an mpsc
-//!   channel, shared by epoch planning and per-step batch prep.
+//! - [`HostPool`] (re-exported from [`crate::util::pool`], where it is
+//!   shared with the eval pipeline): a persistent `std::thread` pool fed
+//!   over an mpsc channel, used here by epoch planning and per-step
+//!   batch prep.
 //! - [`PadScratch`] + [`prepare_batch`]: one worker batch turned into
 //!   execution-ready [`PreparedUnit`]s (usually one; several when the
 //!   batch overflows every compiled bucket and is split). **Both** the
@@ -23,9 +25,8 @@ use crate::sampler::compute_graph::{ComputeGraph, ComputeGraphBuilder};
 use crate::sampler::{PartContext, TrainTriple};
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::thread;
+
+pub use crate::util::pool::HostPool;
 
 /// Seed for worker `wid`'s RNG stream in `epoch`. Shared by the
 /// sequential and pipelined planners so sampled negatives and batch
@@ -35,69 +36,6 @@ use std::thread;
 /// `^` and `|`, so this is exactly the historical parse).
 pub fn worker_epoch_seed(seed: u64, epoch: usize, wid: usize) -> u64 {
     (seed ^ ((epoch as u64) << 20) ^ ((wid as u64) << 8)) | 1
-}
-
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-/// A persistent pool of host prep threads fed over an mpsc channel.
-///
-/// Jobs are claimed by whichever thread is free (one shared receiver
-/// behind a mutex); result ordering is restored downstream by tagging
-/// results with their worker id, never by relying on completion order.
-/// Dropping the pool closes the channel and joins every thread.
-pub struct HostPool {
-    tx: Option<mpsc::Sender<Job>>,
-    handles: Vec<thread::JoinHandle<()>>,
-}
-
-impl HostPool {
-    pub fn new(threads: usize) -> HostPool {
-        assert!(threads > 0, "HostPool needs at least one thread");
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let handles = (0..threads)
-            .map(|i| {
-                let rx = Arc::clone(&rx);
-                thread::Builder::new()
-                    .name(format!("kgscale-prep-{i}"))
-                    .spawn(move || loop {
-                        // The lock guards only the `recv`; the temporary
-                        // guard is released at the `;`, so other threads
-                        // claim work while this job runs.
-                        let job = rx.lock().expect("prep receiver poisoned").recv();
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // channel closed: pool dropped
-                        }
-                    })
-                    .expect("spawn host prep thread")
-            })
-            .collect();
-        HostPool { tx: Some(tx), handles }
-    }
-
-    pub fn threads(&self) -> usize {
-        self.handles.len()
-    }
-
-    /// Queue a job; any idle pool thread picks it up.
-    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
-        self.tx
-            .as_ref()
-            .expect("sender lives until drop")
-            .send(Box::new(job))
-            .expect("host pool threads alive");
-    }
-}
-
-impl Drop for HostPool {
-    fn drop(&mut self) {
-        // Closing the channel lets workers drain queued jobs and exit.
-        drop(self.tx.take());
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
 }
 
 /// Reusable padded input buffers (no per-batch allocation on the hot
@@ -257,7 +195,6 @@ mod tests {
     use crate::sampler::batch::EpochBatches;
     use crate::sampler::negative::{NegativeSampler, Scope};
     use crate::util::rng::Rng;
-    use std::sync::atomic::{AtomicUsize, Ordering};
 
     fn assert_send<T: Send>() {}
 
@@ -271,28 +208,6 @@ mod tests {
         assert_send::<NegativeSampler>();
         assert_send::<EpochBatches>();
         assert_send::<ComputeGraphBuilder>();
-    }
-
-    #[test]
-    fn host_pool_runs_every_job_and_joins_on_drop() {
-        let pool = HostPool::new(3);
-        assert_eq!(pool.threads(), 3);
-        let counter = Arc::new(AtomicUsize::new(0));
-        let (tx, rx) = mpsc::channel();
-        for i in 0..64usize {
-            let counter = Arc::clone(&counter);
-            let tx = tx.clone();
-            pool.submit(move || {
-                counter.fetch_add(1, Ordering::SeqCst);
-                tx.send(i).unwrap();
-            });
-        }
-        drop(tx);
-        let mut got: Vec<usize> = rx.iter().collect();
-        got.sort_unstable();
-        assert_eq!(got, (0..64).collect::<Vec<_>>());
-        assert_eq!(counter.load(Ordering::SeqCst), 64);
-        drop(pool); // joins cleanly once the queue has drained
     }
 
     #[test]

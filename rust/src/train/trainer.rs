@@ -65,7 +65,7 @@
 
 use crate::config::{ExperimentConfig, GradMode, GradSync};
 use crate::graph::KnowledgeGraph;
-use crate::metrics::{ComponentTimes, EpochRecord, RunHistory};
+use crate::metrics::{ComponentTimes, EpochRecord, EvalStats, RunHistory};
 use crate::model::{init_params, Manifest};
 use crate::partition;
 use crate::runtime::{literal_scalar_f32, literal_to_f32_into, HostTensor, Runtime};
@@ -356,6 +356,9 @@ impl<'rt> Trainer<'rt> {
             avg_sync_bytes: if steps > 0 { stats.sync_bytes_sum / steps as f64 } else { 0.0 },
             prefetch_stall_secs: stats.stall_secs,
             overlap_efficiency: overlap,
+            eval_wall_secs: 0.0,
+            eval_rank_stall_secs: 0.0,
+            eval_overlap_efficiency: 0.0,
         };
         self.history.epochs.push(record.clone());
         Ok(record)
@@ -668,6 +671,20 @@ impl<'rt> Trainer<'rt> {
         let t = self.history.total_virtual_secs();
         let epoch = self.epoch_counter;
         self.history.eval_points.push((t, epoch, mrr));
+    }
+
+    /// Record an evaluation point plus its timing breakdown (the
+    /// overlapped-eval instrumentation in fig6b/fig7). The stats also
+    /// stamp the most recent epoch's `eval_*` fields, so per-epoch
+    /// reports can show what the periodic eval after that epoch cost.
+    pub fn record_eval_stats(&mut self, mrr: f64, stats: &EvalStats) {
+        self.record_eval(mrr);
+        self.history.eval_stats.push(*stats);
+        if let Some(e) = self.history.epochs.last_mut() {
+            e.eval_wall_secs = stats.wall_secs;
+            e.eval_rank_stall_secs = stats.rank_stall_secs;
+            e.eval_overlap_efficiency = stats.overlap_efficiency;
+        }
     }
 
     /// Save parameters + optimizer state, tagged with the gradient mode

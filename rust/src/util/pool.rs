@@ -1,0 +1,108 @@
+//! Shared host thread pool.
+//!
+//! One pool implementation serves every host-side overlap path in the
+//! system: the training data pipeline ([`train::pipeline`]) uses it to
+//! prepare batches while the coordinator executes XLA, and the
+//! evaluation pipeline ([`eval::pipeline`]) uses it to compute filtered
+//! ranks for an already-scored chunk while the next chunk executes.
+//! Jobs are plain-data closures — no xla types ever cross a thread
+//! boundary; the PJRT runtime stays pinned to the coordinator.
+//!
+//! [`train::pipeline`]: crate::train::pipeline
+//! [`eval::pipeline`]: crate::eval::pipeline
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent pool of host threads fed over an mpsc channel.
+///
+/// Jobs are claimed by whichever thread is free (one shared receiver
+/// behind a mutex); result ordering is restored downstream by tagging
+/// results with their origin (worker id, chunk index), never by relying
+/// on completion order. Dropping the pool closes the channel and joins
+/// every thread.
+pub struct HostPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl HostPool {
+    pub fn new(threads: usize) -> HostPool {
+        assert!(threads > 0, "HostPool needs at least one thread");
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("kgscale-host-{i}"))
+                    .spawn(move || loop {
+                        // The lock guards only the `recv`; the temporary
+                        // guard is released at the `;`, so other threads
+                        // claim work while this job runs.
+                        let job = rx.lock().expect("host pool receiver poisoned").recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: pool dropped
+                        }
+                    })
+                    .expect("spawn host pool thread")
+            })
+            .collect();
+        HostPool { tx: Some(tx), handles }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Queue a job; any idle pool thread picks it up.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("sender lives until drop")
+            .send(Box::new(job))
+            .expect("host pool threads alive");
+    }
+}
+
+impl Drop for HostPool {
+    fn drop(&mut self) {
+        // Closing the channel lets workers drain queued jobs and exit.
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn host_pool_runs_every_job_and_joins_on_drop() {
+        let pool = HostPool::new(3);
+        assert_eq!(pool.threads(), 3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for i in 0..64usize {
+            let counter = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.submit(move || {
+                counter.fetch_add(1, Ordering::SeqCst);
+                tx.send(i).unwrap();
+            });
+        }
+        drop(tx);
+        let mut got: Vec<usize> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..64).collect::<Vec<_>>());
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+        drop(pool); // joins cleanly once the queue has drained
+    }
+}

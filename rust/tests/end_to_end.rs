@@ -89,7 +89,7 @@ fn evaluation_improves_with_training() {
     let Some((runtime, manifest)) = artifacts() else { return };
     let cfg = ExperimentConfig::tiny();
     let g = generator::generate(&cfg.dataset);
-    let filter = FilterIndex::build(&g);
+    let filter = FilterIndex::build(&g).unwrap();
     let mut t = Trainer::new(cfg.clone(), &g, &runtime, manifest.clone()).unwrap();
     let before =
         eval::evaluate(&runtime, &manifest, &t.params, &g, &filter, &g.test).unwrap();
@@ -228,6 +228,58 @@ fn pipelined_path_bit_identical_to_sequential() {
             assert!(overlaps.iter().all(|&o| (0.0..=1.0).contains(&o)));
         }
     }
+}
+
+/// The overlapped eval path's central contract: with any
+/// `eval.host_threads` / `eval.prefetch_depth` setting, filtered
+/// MRR/Hits@k are *bit-identical* to the `eval.host_threads = 0`
+/// sequential reference — ranks are integers and both paths fold them
+/// in the same chunk-order, query-order sequence. Also checks the
+/// legacy one-shot `eval::evaluate` agrees with the `Evaluator` driver.
+#[test]
+fn eval_overlapped_bit_identical_to_sequential() {
+    let Some((runtime, manifest)) = artifacts() else { return };
+    let cfg = ExperimentConfig::tiny();
+    let g = generator::generate(&cfg.dataset);
+    let filter = FilterIndex::build(&g).unwrap();
+    let mut t = Trainer::new(cfg.clone(), &g, &runtime, manifest.clone()).unwrap();
+    for _ in 0..3 {
+        t.train_epoch().unwrap();
+    }
+
+    let run = |threads: usize, depth: usize| {
+        let ecfg = kgscale::config::EvalConfig { host_threads: threads, prefetch_depth: depth };
+        let mut ev = eval::Evaluator::new(&manifest, &g, &ecfg).unwrap();
+        ev.evaluate(&runtime, &manifest, &t.params, &filter, &g.test).unwrap()
+    };
+    let (want, seq_stats) = run(0, 2);
+    assert_eq!(want.num_queries, 2 * g.test.len());
+    assert!(seq_stats.num_chunks > 1, "tiny test set should span several chunks");
+    // The sequential path never stalls and reports no overlap.
+    assert_eq!(seq_stats.rank_stall_secs, 0.0);
+    assert_eq!(seq_stats.overlap_efficiency, 0.0);
+    assert!(seq_stats.rank_secs > 0.0);
+
+    for (threads, depth) in [(1usize, 1usize), (3, 2), (4, 3)] {
+        let (got, stats) = run(threads, depth);
+        assert_eq!(got.num_queries, want.num_queries);
+        assert_eq!(
+            got.mrr.to_bits(),
+            want.mrr.to_bits(),
+            "threads={threads} depth={depth}: MRR must match sequential bit-for-bit"
+        );
+        assert_eq!(got.hits1.to_bits(), want.hits1.to_bits());
+        assert_eq!(got.hits3.to_bits(), want.hits3.to_bits());
+        assert_eq!(got.hits10.to_bits(), want.hits10.to_bits());
+        assert_eq!(stats.num_chunks, seq_stats.num_chunks);
+        assert!(stats.rank_stall_secs >= 0.0);
+        assert!((0.0..=1.0).contains(&stats.overlap_efficiency));
+    }
+
+    // Legacy one-shot entry point agrees with the cached driver.
+    let legacy = eval::evaluate(&runtime, &manifest, &t.params, &g, &filter, &g.test).unwrap();
+    assert_eq!(legacy.mrr.to_bits(), want.mrr.to_bits());
+    assert_eq!(legacy.hits10.to_bits(), want.hits10.to_bits());
 }
 
 /// The row-sparse gradient path's central claim: `sparse` (row-sparse

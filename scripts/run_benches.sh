@@ -1,17 +1,24 @@
 #!/usr/bin/env bash
 # Run the timing benches and collect machine-readable results at the
-# repo root. The epoch bench always produces BENCH_epoch.json; its
-# train_epoch section (and the other benches' XLA paths) need
-# `make artifacts` to have built artifacts/tiny first.
+# repo root: BENCH_optimizer.json, BENCH_epoch.json, BENCH_eval.json.
+# Each bench's synthetic part always runs; the XLA-backed sections
+# (train_epoch, Evaluator) need `make artifacts` to have built
+# artifacts/tiny first.
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
 cd "$repo_root/rust"
 
 echo "== optimizer bench =="
-cargo bench --bench optimizer
+BENCH_OPTIMIZER_JSON="$repo_root/BENCH_optimizer.json" cargo bench --bench optimizer
 
 echo "== epoch bench =="
 BENCH_EPOCH_JSON="$repo_root/BENCH_epoch.json" cargo bench --bench epoch
 
-echo "results: $repo_root/BENCH_epoch.json"
+echo "== eval bench =="
+BENCH_EVAL_JSON="$repo_root/BENCH_eval.json" cargo bench --bench eval
+
+echo "results:"
+for f in BENCH_optimizer.json BENCH_epoch.json BENCH_eval.json; do
+  echo "  $repo_root/$f"
+done
