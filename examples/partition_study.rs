@@ -72,8 +72,7 @@ fn main() -> anyhow::Result<()> {
         let pcfg = kgscale::config::PartitionConfig {
             strategy,
             num_partitions: 4,
-            hops: 2,
-            hdrf_lambda: 1.0,
+            ..Default::default()
         };
         let parts = partition::partition_graph(&g_cite, &pcfg, 42);
         let s = pstats::compute(&parts, g_cite.num_entities);

@@ -18,8 +18,7 @@ fn main() {
         let pcfg = PartitionConfig {
             strategy: PartitionStrategy::Hdrf,
             num_partitions: p,
-            hops: 2,
-            hdrf_lambda: 1.0,
+            ..Default::default()
         };
         let parts = partition::partition_graph(&g, &pcfg, 42);
         PartContext::new(&parts[0])

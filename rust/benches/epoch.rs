@@ -55,8 +55,7 @@ fn bench_planning(results: &mut Vec<Json>) {
     let pcfg = PartitionConfig {
         strategy: PartitionStrategy::Hdrf,
         num_partitions: 4,
-        hops: 2,
-        hdrf_lambda: 1.0,
+        ..Default::default()
     };
     let parts = partition::partition_graph(&g, &pcfg, cfg.train.seed);
     let workers: Vec<Arc<(PartContext, NegativeSampler)>> = parts

@@ -1,12 +1,133 @@
-//! Bench: partitioning strategies (Table 2 / Table 5 substrate).
+//! Bench: partitioning strategies (Table 2 / Table 5 substrate) and the
+//! parallel build pipeline.
+//!
 //! Measures HDRF / DBH / Greedy-VP / Random assignment and 2-hop
 //! neighborhood expansion on the fbmini-scale graph, and prints the
-//! partition-quality stats the paper's tables report.
+//! partition-quality stats the paper's tables report. Then benches the
+//! tentpole paths: sequential vs multi-threaded expansion (bit-identity
+//! asserted outside the timing loop) and cold vs warm on-disk partition
+//! cache.
+//!
+//! Writes a machine-readable summary to `BENCH_partition.json` (path
+//! overridable via the `BENCH_PARTITION_JSON` env var) for
+//! `scripts/run_benches.sh`.
 
 use kgscale::config::{ExperimentConfig, PartitionConfig, PartitionStrategy};
-use kgscale::graph::generator;
+use kgscale::graph::{generator, Csr, KnowledgeGraph};
 use kgscale::partition::{self, stats as pstats};
-use kgscale::util::bench::bench;
+use kgscale::util::bench::{bench, BenchResult};
+use kgscale::util::json::Json;
+
+fn json_result(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(r.name.clone())),
+        ("mean_secs", Json::Num(r.mean_secs)),
+        ("std_secs", Json::Num(r.std_secs)),
+        ("min_secs", Json::Num(r.min_secs)),
+        ("iters", Json::Num(r.iters as f64)),
+    ])
+}
+
+fn bench_strategies(g: &KnowledgeGraph, results: &mut Vec<Json>) {
+    for strategy in [
+        PartitionStrategy::Hdrf,
+        PartitionStrategy::Dbh,
+        PartitionStrategy::MetisLike,
+        PartitionStrategy::Random,
+    ] {
+        let pcfg = PartitionConfig { strategy, num_partitions: 4, ..Default::default() };
+        let r = bench(&format!("assign/{}/P=4", strategy.name()), 0.6, || {
+            std::hint::black_box(partition::assign_edges(g, &pcfg, 42));
+        });
+        results.push(json_result(&r));
+        let assignment = partition::assign_edges(g, &pcfg, 42);
+        let r = bench(&format!("expand-2hop/{}/P=4", strategy.name()), 0.6, || {
+            std::hint::black_box(partition::expansion::expand(g, &assignment, 2));
+        });
+        results.push(json_result(&r));
+        let parts = partition::expansion::expand(g, &assignment, 2);
+        let s = pstats::compute(&parts, g.num_entities);
+        println!(
+            "    -> core {} | total {} | RF {:.2} | balance {:.2}",
+            s.core_cell(),
+            s.total_cell(),
+            s.replication_factor,
+            s.balance_ratio
+        );
+    }
+}
+
+/// Tentpole A: sequential (`build_threads = 0`) vs threaded expansion
+/// over a shared CSR, P=8 so the fan-out has work to distribute.
+fn bench_threaded_expansion(g: &KnowledgeGraph, results: &mut Vec<Json>) {
+    let pcfg = PartitionConfig { num_partitions: 8, ..Default::default() };
+    let csr = Csr::build(g.num_entities, &g.train);
+    let assignment = partition::assign_edges_with(g, &csr, &pcfg, 42);
+    let want = partition::expansion::expand_with(g, &csr, &assignment, 2, 0);
+    let mut seq_mean = 0.0;
+    for threads in [0usize, 2, 4] {
+        // Correctness outside the timing loop: any thread count must be
+        // bit-identical to the sequential reference.
+        let got = partition::expansion::expand_with(g, &csr, &assignment, 2, threads);
+        assert_eq!(got, want, "threaded expansion diverged at {threads} threads");
+        let label = if threads == 0 {
+            "expand/P=8/sequential".to_string()
+        } else {
+            format!("expand/P=8/threads-{threads}")
+        };
+        let r = bench(&label, 0.6, || {
+            std::hint::black_box(partition::expansion::expand_with(
+                g,
+                &csr,
+                &assignment,
+                2,
+                threads,
+            ));
+        });
+        if threads == 0 {
+            seq_mean = r.mean_secs;
+        } else {
+            println!("    -> {:.2}x vs sequential", seq_mean / r.mean_secs.max(1e-12));
+        }
+        results.push(json_result(&r));
+    }
+}
+
+/// Tentpole B: full `build_partitions` cold (rebuild + cache write) vs
+/// warm (cache load). The warm path must report a hit every iteration.
+fn bench_cache(g: &KnowledgeGraph, results: &mut Vec<Json>) {
+    let dir = std::env::temp_dir().join(format!("kgscale-bench-pcache-{}", std::process::id()));
+    let pcfg = PartitionConfig {
+        num_partitions: 8,
+        build_threads: 2,
+        cache_dir: dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    };
+    let r = bench("build/P=8/cold-cache", 0.6, || {
+        // Remove the entry inside the timing loop: every iteration pays
+        // assignment + expansion + serialization, like a first run.
+        let _ = std::fs::remove_dir_all(&dir);
+        let (parts, stats) = partition::build_partitions(g, &pcfg, 42);
+        assert!(!stats.cache_hit);
+        std::hint::black_box(parts);
+    });
+    results.push(json_result(&r));
+    let cold_mean = r.mean_secs;
+
+    let (want, _) = partition::build_partitions(g, &pcfg, 42); // prime the cache
+    let r = bench("build/P=8/warm-cache", 0.6, || {
+        let (parts, stats) = partition::build_partitions(g, &pcfg, 42);
+        assert!(stats.cache_hit, "warm build must load from cache");
+        std::hint::black_box(parts);
+    });
+    println!("    -> warm {:.2}x vs cold", cold_mean / r.mean_secs.max(1e-12));
+    results.push(json_result(&r));
+
+    // Loaded output is bit-identical to a rebuilt one.
+    let (warm, _) = partition::build_partitions(g, &pcfg, 42);
+    assert_eq!(warm, want, "cache round-trip changed the partitions");
+    let _ = std::fs::remove_dir_all(&dir);
+}
 
 fn main() {
     let cfg = ExperimentConfig::from_file("configs/fbmini.toml")
@@ -18,40 +139,14 @@ fn main() {
         g.train.len()
     );
 
-    for strategy in [
-        PartitionStrategy::Hdrf,
-        PartitionStrategy::Dbh,
-        PartitionStrategy::MetisLike,
-        PartitionStrategy::Random,
-    ] {
-        let pcfg =
-            PartitionConfig { strategy, num_partitions: 4, hops: 2, hdrf_lambda: 1.0 };
-        bench(&format!("assign/{}/P=4", strategy.name()), 0.6, || {
-            std::hint::black_box(partition::assign_edges(&g, &pcfg, 42));
-        });
-        let assignment = partition::assign_edges(&g, &pcfg, 42);
-        bench(&format!("expand-2hop/{}/P=4", strategy.name()), 0.6, || {
-            std::hint::black_box(partition::expansion::expand(&g, &assignment, 2));
-        });
-        let parts = partition::expansion::expand(&g, &assignment, 2);
-        let s = pstats::compute(&parts, g.num_entities);
-        println!(
-            "    -> core {} | total {} | RF {:.2} | balance {:.2}",
-            s.core_cell(),
-            s.total_cell(),
-            s.replication_factor,
-            s.balance_ratio
-        );
-    }
+    let mut results = Vec::new();
+    bench_strategies(&g, &mut results);
+    bench_threaded_expansion(&g, &mut results);
+    bench_cache(&g, &mut results);
 
     // Table 2 shape: RF vs P for HDRF.
     for p in [2usize, 4, 8] {
-        let pcfg = PartitionConfig {
-            strategy: PartitionStrategy::Hdrf,
-            num_partitions: p,
-            hops: 2,
-            hdrf_lambda: 1.0,
-        };
+        let pcfg = PartitionConfig { num_partitions: p, ..Default::default() };
         let parts = partition::partition_graph(&g, &pcfg, 42);
         let s = pstats::compute(&parts, g.num_entities);
         println!(
@@ -61,4 +156,14 @@ fn main() {
             s.replication_factor
         );
     }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("partition".to_string())),
+        ("tier", Json::Str(cfg.name.clone())),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = std::env::var("BENCH_PARTITION_JSON")
+        .unwrap_or_else(|_| "BENCH_partition.json".to_string());
+    std::fs::write(&path, out.to_string_pretty()).expect("write bench json");
+    println!("wrote {path}");
 }

@@ -17,8 +17,7 @@ fn main() {
     let pcfg = PartitionConfig {
         strategy: PartitionStrategy::Hdrf,
         num_partitions: 4,
-        hops: 2,
-        hdrf_lambda: 1.0,
+        ..Default::default()
     };
     let parts = partition::partition_graph(&g, &pcfg, 42);
     let ctx = PartContext::new(&parts[0]);

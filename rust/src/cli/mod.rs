@@ -103,7 +103,10 @@ COMMANDS
   plan      --config C [--trainers 1,2,4,8] [--out plan.json]
                                measure AOT bucket sizes for aot.py
   partition --config C [--partitions 4] [--strategy hdrf|dbh|metis_like|random]
+            [--build-threads N] [--cache-dir DIR]
                                partition + expand, print Table-2 stats
+                               plus build breakdown (N=0: sequential;
+                               DIR caches builds keyed by graph+config+seed)
   train     --config C [--trainers P] [--epochs N] [--eval-every K]
                                train and report loss/MRR
   experiment <table1|table2|table3|table4|table5|fig2|fig6|fig7|all>

@@ -231,6 +231,34 @@ pub struct PartitionConfig {
     pub hops: usize,
     /// HDRF balance/replication trade-off parameter λ.
     pub hdrf_lambda: f64,
+    /// Worker threads for neighborhood expansion: partitions expand in
+    /// parallel, each worker reusing one arena scratch. 0 = sequential
+    /// reference path. Output is bit-identical for any value.
+    pub build_threads: usize,
+    /// Directory for the on-disk partition cache; "" disables caching.
+    /// Entries are keyed by a content hash of the graph (entity/relation
+    /// counts + every train-edge triple), the partition config
+    /// (strategy, num_partitions, hops, hdrf_lambda), and the dataset
+    /// seed — change any of those and the cache invalidates itself. A
+    /// stale or corrupt entry is rebuilt with a logged warning, never an
+    /// error. `build_threads` and `cache_dir` themselves are *not* part
+    /// of the key: they change how a build runs, not what it produces.
+    pub cache_dir: String,
+}
+
+impl Default for PartitionConfig {
+    /// The `tiny()` partition defaults: single partition, 2-hop
+    /// expansion, sequential build, caching off.
+    fn default() -> Self {
+        PartitionConfig {
+            strategy: PartitionStrategy::Hdrf,
+            num_partitions: 1,
+            hops: 2,
+            hdrf_lambda: 1.0,
+            build_threads: 0,
+            cache_dir: String::new(),
+        }
+    }
 }
 
 /// α-β interconnect model for the simulated cluster: transferring M bytes
@@ -308,12 +336,7 @@ impl ExperimentConfig {
                 prefetch_depth: 2,
             },
             eval: EvalConfig { host_threads: 0, prefetch_depth: 2 },
-            partition: PartitionConfig {
-                strategy: PartitionStrategy::Hdrf,
-                num_partitions: 1,
-                hops: 2,
-                hdrf_lambda: 1.0,
-            },
+            partition: PartitionConfig::default(),
             network: NetworkConfig {
                 latency_us: 30.0,
                 bandwidth_gbps: 40.0,
@@ -385,6 +408,10 @@ impl ExperimentConfig {
         set_usize(&doc, "partition.num_partitions", &mut cfg.partition.num_partitions);
         set_usize(&doc, "partition.hops", &mut cfg.partition.hops);
         set_f64(&doc, "partition.hdrf_lambda", &mut cfg.partition.hdrf_lambda);
+        set_usize(&doc, "partition.build_threads", &mut cfg.partition.build_threads);
+        if let Some(v) = doc.get_str("partition.cache_dir") {
+            cfg.partition.cache_dir = v.to_string();
+        }
         // network
         set_f64(&doc, "network.latency_us", &mut cfg.network.latency_us);
         set_f64(&doc, "network.bandwidth_gbps", &mut cfg.network.bandwidth_gbps);
@@ -453,6 +480,13 @@ impl ExperimentConfig {
                 "eval.host_threads = {} is not a plausible host thread count \
                  (use 0 for the sequential path)",
                 self.eval.host_threads
+            );
+        }
+        if self.partition.build_threads > 256 {
+            bail!(
+                "partition.build_threads = {} is not a plausible host thread count \
+                 (use 0 for the sequential path)",
+                self.partition.build_threads
             );
         }
         Ok(())
@@ -609,6 +643,21 @@ num_partitions = 4
             .unwrap_err()
             .to_string();
         assert!(err.contains("eval.host_threads"), "got: {err}");
+    }
+
+    #[test]
+    fn partition_build_keys_parse_and_validate() {
+        let toml = "[partition]\nbuild_threads = 4\ncache_dir = \"artifacts/pcache\"\n";
+        let cfg = ExperimentConfig::from_toml_str(toml).unwrap();
+        assert_eq!(cfg.partition.build_threads, 4);
+        assert_eq!(cfg.partition.cache_dir, "artifacts/pcache");
+        // Defaults: sequential reference build, caching off.
+        assert_eq!(ExperimentConfig::tiny().partition.build_threads, 0);
+        assert_eq!(ExperimentConfig::tiny().partition.cache_dir, "");
+        let err = ExperimentConfig::from_toml_str("[partition]\nbuild_threads = 100000\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("build_threads"), "got: {err}");
     }
 
     #[test]

@@ -69,6 +69,58 @@ pub fn table2(
     t
 }
 
+/// Table 2 extended with build diagnostics: per-stage wall-time
+/// breakdown (assign / expand / cache-io) and the cache outcome for each
+/// partition count, from the production [`partition::build_partitions`]
+/// path. Returns the stats alongside the table so callers can log
+/// summaries or archive them.
+pub fn partition_report(
+    cfg: &ExperimentConfig,
+    graph: &KnowledgeGraph,
+    partition_counts: &[usize],
+) -> (Table, Vec<partition::PartitionBuildStats>) {
+    let mut t = Table::new(
+        "Partition statistics + build breakdown",
+        &[
+            "Dataset",
+            "# partitions",
+            "# core edges",
+            "# total edges",
+            "RF",
+            "build (s)",
+            "assign (s)",
+            "expand (s)",
+            "cache-io (s)",
+            "cache",
+        ],
+    );
+    let mut all_stats = Vec::new();
+    for &p in partition_counts {
+        let mut pcfg = cfg.partition.clone();
+        pcfg.num_partitions = p;
+        let (parts, build) = partition::build_partitions(graph, &pcfg, cfg.dataset.seed);
+        let s = pstats::compute(&parts, graph.num_entities);
+        t.row(vec![
+            graph.name.clone(),
+            p.to_string(),
+            s.core_cell(),
+            s.total_cell(),
+            format!("{:.2}", s.replication_factor),
+            format!("{:.3}", build.wall_secs),
+            format!("{:.3}", build.assign_secs),
+            format!("{:.3}", build.expand_secs),
+            format!("{:.3}", build.cache_io_secs),
+            match (&build.cache_path, build.cache_hit) {
+                (None, _) => "off".to_string(),
+                (Some(_), true) => "hit".to_string(),
+                (Some(_), false) => "miss".to_string(),
+            },
+        ]);
+        all_stats.push(build);
+    }
+    (t, all_stats)
+}
+
 /// One trainer-count run for Table 3: train `epochs`, then evaluate.
 pub struct Table3Row {
     pub trainers: usize,
@@ -387,6 +439,22 @@ mod tests {
         // RF column increases with partitions
         let rf: Vec<f64> = t.rows.iter().map(|r| r[4].parse().unwrap()).collect();
         assert!(rf[0] <= rf[1] && rf[1] <= rf[2]);
+    }
+
+    #[test]
+    fn partition_report_matches_table2_stats_and_reports_build() {
+        let cfg = ExperimentConfig::tiny();
+        let g = dataset(&cfg);
+        let (t, stats) = partition_report(&cfg, &g, &[2, 4]);
+        let reference = table2(&cfg, &g, &[2, 4]);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(stats.len(), 2);
+        for (row, want) in t.rows.iter().zip(&reference.rows) {
+            // Shared stat columns agree with the plain Table-2 pipeline.
+            assert_eq!(row[..5], want[..5]);
+            assert_eq!(row[9], "off", "tiny config has no cache_dir");
+        }
+        assert!(stats.iter().all(|s| !s.cache_hit && s.cache_path.is_none()));
     }
 
     #[test]

@@ -61,6 +61,23 @@ impl Csr {
     pub fn degree(&self, v: u32) -> usize {
         self.in_degree(v) + self.out_degree(v)
     }
+
+    /// All edge ids incident to `v` — out-edges first, then in-edges —
+    /// without allocating an intermediate `Vec`. The order matches the
+    /// `out_edges(v).iter().chain(in_edges(v))` idiom the expansion BFS
+    /// and the greedy vertex partitioner both rely on for determinism.
+    #[inline]
+    pub fn incident(&self, v: u32) -> impl Iterator<Item = u32> + '_ {
+        self.out_edges(v).iter().chain(self.in_edges(v)).copied()
+    }
+
+    /// Total (in+out) degree of every vertex, read off the offset
+    /// arrays. Identical to `KnowledgeGraph::degrees()` over the same
+    /// edge list — lets a caller that already built the CSR skip the
+    /// extra O(E) counting pass.
+    pub fn degrees(&self) -> Vec<u32> {
+        (0..self.num_vertices as u32).map(|v| self.degree(v) as u32).collect()
+    }
 }
 
 fn index_by(num_vertices: usize, edges: &[Triple], vertex: impl Fn(&Triple) -> u32) -> (Vec<u32>, Vec<u32>) {
@@ -148,5 +165,29 @@ mod tests {
         let csr = Csr::build(3, &[]);
         assert_eq!(csr.num_vertices(), 3);
         assert!(csr.out_edges(0).is_empty());
+    }
+
+    #[test]
+    fn incident_matches_chained_slices() {
+        let es = edges();
+        let csr = Csr::build(4, &es);
+        for v in 0..4u32 {
+            let want: Vec<u32> =
+                csr.out_edges(v).iter().chain(csr.in_edges(v)).copied().collect();
+            let got: Vec<u32> = csr.incident(v).collect();
+            assert_eq!(got, want);
+            assert_eq!(got.len(), csr.degree(v));
+        }
+    }
+
+    #[test]
+    fn degrees_match_per_vertex_degree() {
+        let es = edges();
+        let csr = Csr::build(4, &es);
+        let d = csr.degrees();
+        assert_eq!(d.len(), 4);
+        for v in 0..4u32 {
+            assert_eq!(d[v as usize] as usize, csr.degree(v));
+        }
     }
 }

@@ -121,10 +121,18 @@ fn cmd_partition(args: &Args) -> Result<()> {
     if let Some(s) = args.get("strategy") {
         cfg.partition.strategy = kgscale::config::PartitionStrategy::from_str(s)?;
     }
+    cfg.partition.build_threads = args.get_usize("build-threads", cfg.partition.build_threads)?;
+    if let Some(d) = args.get("cache-dir") {
+        cfg.partition.cache_dir = d.to_string();
+    }
+    cfg.validate()?;
     args.finish()?;
     let g = experiments::dataset(&cfg);
-    let t = experiments::table2(&cfg, &g, &[p]);
+    let (t, stats) = experiments::partition_report(&cfg, &g, &[p]);
     println!("{}", t.to_markdown());
+    for s in &stats {
+        println!("{}", s.summary());
+    }
     Ok(())
 }
 

@@ -1,0 +1,380 @@
+//! On-disk partition cache.
+//!
+//! Self-sufficient partition construction (assignment + n-hop
+//! neighborhood expansion) is deterministic in the graph, the
+//! [`PartitionConfig`], and the seed — so its output can be memoized
+//! across runs. Every eval-only rerun, bench repeat, or resumed
+//! experiment on an identical config previously rebuilt partitions from
+//! nothing; with a cache dir configured (`partition.cache_dir`), the
+//! second run loads them instead and skips both stages.
+//!
+//! **Cache key.** A 64-bit FNV-1a content hash over: a format tag, the
+//! entity/relation counts, every train-edge triple's bytes, the full
+//! partition config (strategy, P, hops, λ bits), and the seed. Any
+//! change to those invalidates the entry. A stale or corrupt file is
+//! *never* an error: `partition::build_partitions` logs a warning and
+//! rebuilds (then overwrites the entry).
+//!
+//! **File layout** (little-endian), one file per key:
+//!
+//! ```text
+//! magic "KGPC" | version u32 | key u64
+//! | build manifest: strategy (len u32 + utf8) | P u64 | hops u64
+//! |                 λ f64-bits u64 | seed u64
+//! | assignment: train_edges u64 | u32[train_edges]
+//! | partitions u64, then per partition:
+//! |   id u64 | #vertices u64 | #core u64 | #support u64
+//! |   vertices u32[] | roles u8[] | core (s,r,t) u32[] | support u32[]
+//! ```
+
+use super::{EdgeAssignment, Partition, VertexRole};
+use crate::config::PartitionConfig;
+use crate::graph::{KnowledgeGraph, Triple};
+use anyhow::{ensure, Context, Result};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 4] = b"KGPC";
+const VERSION: u32 = 1;
+
+/// Streaming FNV-1a (64-bit) — stable across platforms and runs, unlike
+/// `DefaultHasher`, whose algorithm is explicitly unspecified.
+struct Fnv64(u64);
+
+impl Fnv64 {
+    fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn write_u32(&mut self, v: u32) {
+        self.write(&v.to_le_bytes());
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Content hash identifying one partition build: graph identity
+/// (entity/relation counts + train-edge bytes) + full partition config
+/// + seed. Valid/test splits are deliberately excluded — partitioning
+/// only ever reads train edges.
+pub fn cache_key(g: &KnowledgeGraph, cfg: &PartitionConfig, seed: u64) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(b"kgscale-partition-cache-v1");
+    h.write_u64(g.num_entities as u64);
+    h.write_u64(g.num_relations as u64);
+    h.write_u64(g.train.len() as u64);
+    for e in &g.train {
+        h.write_u32(e.s);
+        h.write_u32(e.r);
+        h.write_u32(e.t);
+    }
+    h.write(cfg.strategy.name().as_bytes());
+    h.write_u64(cfg.num_partitions as u64);
+    h.write_u64(cfg.hops as u64);
+    h.write_u64(cfg.hdrf_lambda.to_bits());
+    h.write_u64(seed);
+    h.finish()
+}
+
+/// Cache file for a key: `<dir>/<strategy>-p<P>-h<hops>-<key>.kgpart`.
+/// The human-readable prefix aids `ls`-level debugging; only the key
+/// byte in the file decides validity.
+pub fn cache_file(dir: &Path, cfg: &PartitionConfig, key: u64) -> PathBuf {
+    dir.join(format!(
+        "{}-p{}-h{}-{key:016x}.kgpart",
+        cfg.strategy.name(),
+        cfg.num_partitions,
+        cfg.hops
+    ))
+}
+
+fn role_tag(role: VertexRole) -> u8 {
+    match role {
+        VertexRole::Core => 0,
+        VertexRole::Replicated => 1,
+        VertexRole::Support => 2,
+    }
+}
+
+fn role_from_tag(tag: u8) -> Result<VertexRole> {
+    match tag {
+        0 => Ok(VertexRole::Core),
+        1 => Ok(VertexRole::Replicated),
+        2 => Ok(VertexRole::Support),
+        other => anyhow::bail!("bad vertex-role tag {other}"),
+    }
+}
+
+fn write_u32s(w: &mut impl Write, xs: &[u32]) -> Result<()> {
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_triples(w: &mut impl Write, ts: &[Triple]) -> Result<()> {
+    for t in ts {
+        w.write_all(&t.s.to_le_bytes())?;
+        w.write_all(&t.r.to_le_bytes())?;
+        w.write_all(&t.t.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Serialize assignment + partitions under `key`. Writes to a temp file
+/// in the same directory, then renames — a crashed writer leaves a
+/// `.tmp` orphan, never a torn `.kgpart` that a later run half-parses.
+pub fn save(
+    path: &Path,
+    key: u64,
+    cfg: &PartitionConfig,
+    seed: u64,
+    assignment: &EdgeAssignment,
+    parts: &[Partition],
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating cache dir {dir:?}"))?;
+    }
+    let tmp = path.with_extension("kgpart.tmp");
+    {
+        let file = std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+        let mut w = std::io::BufWriter::new(file);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&key.to_le_bytes())?;
+        // Build manifest (informational; the key is authoritative).
+        let strategy = cfg.strategy.name().as_bytes();
+        w.write_all(&(strategy.len() as u32).to_le_bytes())?;
+        w.write_all(strategy)?;
+        w.write_all(&(cfg.num_partitions as u64).to_le_bytes())?;
+        w.write_all(&(cfg.hops as u64).to_le_bytes())?;
+        w.write_all(&cfg.hdrf_lambda.to_bits().to_le_bytes())?;
+        w.write_all(&seed.to_le_bytes())?;
+        // Pre-expansion assignment.
+        w.write_all(&(assignment.assignment.len() as u64).to_le_bytes())?;
+        write_u32s(&mut w, &assignment.assignment)?;
+        // Expanded partitions.
+        w.write_all(&(parts.len() as u64).to_le_bytes())?;
+        for p in parts {
+            w.write_all(&(p.id as u64).to_le_bytes())?;
+            w.write_all(&(p.vertices.len() as u64).to_le_bytes())?;
+            w.write_all(&(p.core_edges.len() as u64).to_le_bytes())?;
+            w.write_all(&(p.support_edges.len() as u64).to_le_bytes())?;
+            write_u32s(&mut w, &p.vertices)?;
+            for &r in &p.roles {
+                w.write_all(&[role_tag(r)])?;
+            }
+            write_triples(&mut w, &p.core_edges)?;
+            write_triples(&mut w, &p.support_edges)?;
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32s(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn read_triples(r: &mut impl Read, n: usize) -> Result<Vec<Triple>> {
+    let words = read_u32s(r, n * 3)?;
+    Ok(words.chunks_exact(3).map(|c| Triple::new(c[0], c[1], c[2])).collect())
+}
+
+/// Load a cache file, validating magic, version, key, and structural
+/// sanity against the graph + config the caller is about to build for.
+/// Every failure mode is an `Err` — the caller treats it as a miss.
+pub fn load(
+    path: &Path,
+    expected_key: u64,
+    g: &KnowledgeGraph,
+    cfg: &PartitionConfig,
+) -> Result<(EdgeAssignment, Vec<Partition>)> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut r = std::io::BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC, "not a partition cache file");
+    let mut u32b = [0u8; 4];
+    r.read_exact(&mut u32b)?;
+    let version = u32::from_le_bytes(u32b);
+    ensure!(version == VERSION, "unsupported partition cache version {version}");
+    let key = read_u64(&mut r)?;
+    ensure!(
+        key == expected_key,
+        "stale cache: key {key:016x} != expected {expected_key:016x} \
+         (graph, partition config, or seed changed)"
+    );
+    // Build manifest: validated against the requesting config, although
+    // a key match already implies it — defense against hash collisions
+    // costs four comparisons.
+    r.read_exact(&mut u32b)?;
+    let strategy_len = u32::from_le_bytes(u32b) as usize;
+    ensure!(strategy_len <= 64, "implausible strategy-name length {strategy_len}");
+    let mut strategy = vec![0u8; strategy_len];
+    r.read_exact(&mut strategy)?;
+    ensure!(strategy == cfg.strategy.name().as_bytes(), "cached strategy mismatch");
+    let p = read_u64(&mut r)? as usize;
+    ensure!(p == cfg.num_partitions, "cached partition count mismatch");
+    let hops = read_u64(&mut r)? as usize;
+    ensure!(hops == cfg.hops, "cached hops mismatch");
+    let _lambda_bits = read_u64(&mut r)?;
+    let _seed = read_u64(&mut r)?;
+    // Assignment.
+    let n_edges = read_u64(&mut r)? as usize;
+    ensure!(n_edges == g.train.len(), "cached assignment covers {n_edges} train edges");
+    let assignment_vec = read_u32s(&mut r, n_edges)?;
+    ensure!(
+        assignment_vec.iter().all(|&a| (a as usize) < p),
+        "cached assignment has out-of-range partition id"
+    );
+    let assignment = EdgeAssignment { num_partitions: p, assignment: assignment_vec };
+    // Partitions.
+    let n_parts = read_u64(&mut r)? as usize;
+    ensure!(n_parts == p, "cached file holds {n_parts} partitions, want {p}");
+    let mut parts = Vec::with_capacity(n_parts);
+    for i in 0..n_parts {
+        let id = read_u64(&mut r)? as usize;
+        ensure!(id == i, "cached partitions out of order: slot {i} holds id {id}");
+        let n_vert = read_u64(&mut r)? as usize;
+        let n_core = read_u64(&mut r)? as usize;
+        let n_supp = read_u64(&mut r)? as usize;
+        ensure!(
+            n_vert <= g.num_entities && n_core + n_supp <= g.train.len(),
+            "cached partition {i} is larger than the graph"
+        );
+        let vertices = read_u32s(&mut r, n_vert)?;
+        let mut role_tags = vec![0u8; n_vert];
+        r.read_exact(&mut role_tags)?;
+        let roles = role_tags.iter().map(|&t| role_from_tag(t)).collect::<Result<Vec<_>>>()?;
+        let core_edges = read_triples(&mut r, n_core)?;
+        let support_edges = read_triples(&mut r, n_supp)?;
+        parts.push(Partition { id, vertices, roles, core_edges, support_edges });
+    }
+    // Trailing garbage means the writer and reader disagree — reject.
+    let mut trailing = [0u8; 1];
+    ensure!(
+        r.read(&mut trailing)? == 0,
+        "trailing bytes after partition cache payload"
+    );
+    Ok((assignment, parts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, PartitionStrategy};
+    use crate::graph::generator;
+    use crate::partition;
+
+    fn graph() -> KnowledgeGraph {
+        let mut cfg = ExperimentConfig::tiny().dataset;
+        cfg.entities = 400;
+        cfg.train_edges = 3000;
+        generator::generate(&cfg)
+    }
+
+    fn pcfg() -> PartitionConfig {
+        PartitionConfig {
+            strategy: PartitionStrategy::Hdrf,
+            num_partitions: 4,
+            hops: 2,
+            ..Default::default()
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("kgscale-pcache-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrip_is_deep_equal() {
+        let g = graph();
+        let cfg = pcfg();
+        let assignment = partition::assign_edges(&g, &cfg, 11);
+        let parts = partition::expansion::expand(&g, &assignment, cfg.hops);
+        let key = cache_key(&g, &cfg, 11);
+        let dir = tmp_dir("roundtrip");
+        let path = cache_file(&dir, &cfg, key);
+        save(&path, key, &cfg, 11, &assignment, &parts).unwrap();
+        let (a2, p2) = load(&path, key, &g, &cfg).unwrap();
+        assert_eq!(a2, assignment);
+        assert_eq!(p2, parts);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn key_is_sensitive_to_graph_config_and_seed() {
+        let g = graph();
+        let cfg = pcfg();
+        let base = cache_key(&g, &cfg, 11);
+        assert_eq!(base, cache_key(&g, &cfg, 11), "key must be deterministic");
+        assert_ne!(base, cache_key(&g, &cfg, 12), "seed must invalidate");
+        let mut c2 = cfg.clone();
+        c2.num_partitions = 8;
+        assert_ne!(base, cache_key(&g, &c2, 11), "partition count must invalidate");
+        let mut c3 = cfg.clone();
+        c3.strategy = PartitionStrategy::Random;
+        assert_ne!(base, cache_key(&g, &c3, 11), "strategy must invalidate");
+        let mut c4 = cfg.clone();
+        c4.hops = 1;
+        assert_ne!(base, cache_key(&g, &c4, 11), "hops must invalidate");
+        let mut g2 = g.clone();
+        g2.train[0].r ^= 1;
+        assert_ne!(base, cache_key(&g2, &cfg, 11), "train edges must invalidate");
+        // build_threads / cache_dir are deliberately NOT part of the key:
+        // they change how the build runs, not what it produces.
+        let mut c5 = cfg.clone();
+        c5.build_threads = 7;
+        c5.cache_dir = "elsewhere".into();
+        assert_eq!(base, cache_key(&g, &c5, 11));
+    }
+
+    #[test]
+    fn stale_key_and_garbage_are_rejected() {
+        let g = graph();
+        let cfg = pcfg();
+        let assignment = partition::assign_edges(&g, &cfg, 11);
+        let parts = partition::expansion::expand(&g, &assignment, cfg.hops);
+        let key = cache_key(&g, &cfg, 11);
+        let dir = tmp_dir("stale");
+        let path = cache_file(&dir, &cfg, key);
+        save(&path, key, &cfg, 11, &assignment, &parts).unwrap();
+        // Wrong expected key (e.g. hash of a changed graph) -> stale.
+        let err = load(&path, key ^ 1, &g, &cfg).unwrap_err().to_string();
+        assert!(err.contains("stale"), "got: {err}");
+        // Truncation -> corrupt.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&path, key, &g, &cfg).is_err());
+        // Plain garbage -> corrupt.
+        std::fs::write(&path, b"not a cache file").unwrap();
+        assert!(load(&path, key, &g, &cfg).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -23,7 +23,19 @@ use std::collections::BinaryHeap;
 
 /// Greedy BFS-grow vertex partitioning + source-vertex edge assignment.
 pub fn metis_like(g: &KnowledgeGraph, num_partitions: usize, seed: u64) -> EdgeAssignment {
-    let owner = partition_vertices(g, num_partitions, seed);
+    let csr = Csr::build(g.num_entities, &g.train);
+    metis_like_with(g, &csr, num_partitions, seed)
+}
+
+/// [`metis_like`] with a caller-provided CSR, so the build pipeline can
+/// share one CSR between assignment and neighborhood expansion.
+pub fn metis_like_with(
+    g: &KnowledgeGraph,
+    csr: &Csr,
+    num_partitions: usize,
+    seed: u64,
+) -> EdgeAssignment {
+    let owner = partition_vertices_with(g, csr, num_partitions, seed);
     // Edge -> partition of its source vertex ("first hop neighbors of
     // vertices are the core edges", §4.5.5).
     let assignment = g.train.iter().map(|e| owner[e.s as usize]).collect();
@@ -32,9 +44,19 @@ pub fn metis_like(g: &KnowledgeGraph, num_partitions: usize, seed: u64) -> EdgeA
 
 /// Balanced greedy region growing. Returns owner[vertex] -> partition.
 pub fn partition_vertices(g: &KnowledgeGraph, num_partitions: usize, seed: u64) -> Vec<u32> {
+    let csr = Csr::build(g.num_entities, &g.train);
+    partition_vertices_with(g, &csr, num_partitions, seed)
+}
+
+/// [`partition_vertices`] over a caller-provided CSR.
+pub fn partition_vertices_with(
+    g: &KnowledgeGraph,
+    csr: &Csr,
+    num_partitions: usize,
+    seed: u64,
+) -> Vec<u32> {
     let n = g.num_entities;
     let p = num_partitions;
-    let csr = Csr::build(n, &g.train);
     let target = n.div_ceil(p);
     let mut owner = vec![u32::MAX; n];
     let mut sizes = vec![0usize; p];
@@ -48,15 +70,15 @@ pub fn partition_vertices(g: &KnowledgeGraph, num_partitions: usize, seed: u64) 
     rng.shuffle(&mut order);
     let mut seed_cursor = 0usize;
 
-    let neighbors = |v: u32, csr: &Csr| -> Vec<u32> {
-        let mut out = Vec::with_capacity(csr.degree(v));
-        for &eid in csr.out_edges(v) {
-            out.push(g.train[eid as usize].t);
-        }
-        for &eid in csr.in_edges(v) {
-            out.push(g.train[eid as usize].s);
-        }
-        out
+    // Neighbor walk straight off the CSR slices (out-targets first, then
+    // in-sources — the order the old per-call `Vec` used). The gain scan
+    // below runs once per (popped vertex, unassigned neighbor) pair, so
+    // an allocating walk here was O(Σdeg²) heap traffic per region pop.
+    let neighbors = |v: u32| {
+        csr.out_edges(v)
+            .iter()
+            .map(|&eid| g.train[eid as usize].t)
+            .chain(csr.in_edges(v).iter().map(|&eid| g.train[eid as usize].s))
     };
 
     let mut assigned = 0usize;
@@ -90,12 +112,10 @@ pub fn partition_vertices(g: &KnowledgeGraph, num_partitions: usize, seed: u64) 
             sizes[part] += 1;
             assigned += 1;
             // Push neighbors with updated gains.
-            for w in neighbors(v, &csr) {
+            for w in neighbors(v) {
                 if owner[w as usize] == u32::MAX {
-                    let gain = neighbors(w, &csr)
-                        .iter()
-                        .filter(|&&x| owner[x as usize] == part as u32)
-                        .count() as i64;
+                    let gain =
+                        neighbors(w).filter(|&x| owner[x as usize] == part as u32).count() as i64;
                     heaps[part].push((gain, w));
                 }
             }
@@ -160,5 +180,13 @@ mod tests {
     fn deterministic_per_seed() {
         let g = graph();
         assert_eq!(metis_like(&g, 4, 5).assignment, metis_like(&g, 4, 5).assignment);
+    }
+
+    #[test]
+    fn shared_csr_variant_is_identical() {
+        let g = graph();
+        let csr = Csr::build(g.num_entities, &g.train);
+        assert_eq!(metis_like_with(&g, &csr, 4, 3).assignment, metis_like(&g, 4, 3).assignment);
+        assert_eq!(partition_vertices_with(&g, &csr, 4, 3), partition_vertices(&g, 4, 3));
     }
 }

@@ -17,46 +17,131 @@
 
 use super::{EdgeAssignment, Partition, VertexRole};
 use crate::graph::{Csr, KnowledgeGraph};
+use crate::util::pool;
 
-/// Expand every partition of `assignment` to `hops`-hop self-sufficiency.
-pub fn expand(g: &KnowledgeGraph, assignment: &EdgeAssignment, hops: usize) -> Vec<Partition> {
-    assert_eq!(assignment.assignment.len(), g.train.len());
-    let p = assignment.num_partitions;
-    let csr = Csr::build(g.num_entities, &g.train);
+const UNSEEN: u32 = u32::MAX;
 
-    // How many partitions hold each vertex as a core endpoint — needed to
-    // distinguish Core from Replicated roles.
-    let mut core_part_count = vec![0u32; g.num_entities];
-    {
-        let mut last_seen = vec![u32::MAX; g.num_entities];
-        for (eid, e) in g.train.iter().enumerate() {
-            let part = assignment.assignment[eid];
-            for v in [e.s, e.t] {
-                if last_seen[v as usize] != part {
-                    last_seen[v as usize] = part;
-                    core_part_count[v as usize] += 1;
-                }
-            }
-        }
-        // last_seen dedupes consecutive hits only; recompute exactly with
-        // a bitset pass when P is small enough to matter. Simpler: exact
-        // recount below.
-        core_part_count.iter_mut().for_each(|c| *c = 0);
-        let words = p.div_ceil(64);
-        let mut bits = vec![0u64; g.num_entities * words];
-        for (eid, e) in g.train.iter().enumerate() {
-            let part = assignment.assignment[eid] as usize;
-            for v in [e.s as usize, e.t as usize] {
-                bits[v * words + part / 64] |= 1 << (part % 64);
-            }
-        }
-        for v in 0..g.num_entities {
-            core_part_count[v] =
-                bits[v * words..(v + 1) * words].iter().map(|w| w.count_ones()).sum();
+/// Reusable per-worker scratch for [`expand_one`] — the same stamped
+/// arena trick as `ComputeGraphBuilder`'s stamp arrays: the O(N) vertex
+/// and O(E) edge state is allocated **once per worker** and logically
+/// cleared in O(1) by bumping `stamp`, instead of re-allocating (and
+/// re-zeroing) `dist`/`needed_edges` vectors for every partition.
+pub struct ExpansionScratch {
+    stamp: u32,
+    /// `dist[v]` is valid iff `dist_stamp[v] == stamp`; else UNSEEN.
+    dist_stamp: Vec<u32>,
+    dist: Vec<u32>,
+    /// Train edge `eid` is needed iff `edge_stamp[eid] == stamp`.
+    edge_stamp: Vec<u32>,
+    /// BFS frontier double buffer, reused across partitions.
+    frontier_a: Vec<u32>,
+    frontier_b: Vec<u32>,
+}
+
+impl ExpansionScratch {
+    pub fn new(num_entities: usize, num_train_edges: usize) -> ExpansionScratch {
+        ExpansionScratch {
+            stamp: 0,
+            dist_stamp: vec![0; num_entities],
+            dist: vec![0; num_entities],
+            edge_stamp: vec![0; num_train_edges],
+            frontier_a: Vec::new(),
+            frontier_b: Vec::new(),
         }
     }
 
-    (0..p).map(|part| expand_one(g, &csr, assignment, part, hops, &core_part_count)).collect()
+    /// Start a fresh expansion: O(1) except on u32 wraparound, where the
+    /// stamp arrays are hard-reset so a stale stamp can never collide.
+    fn begin(&mut self) {
+        if self.stamp == u32::MAX {
+            self.dist_stamp.iter_mut().for_each(|s| *s = 0);
+            self.edge_stamp.iter_mut().for_each(|s| *s = 0);
+            self.stamp = 0;
+        }
+        self.stamp += 1;
+    }
+
+    #[inline]
+    fn dist(&self, v: u32) -> u32 {
+        if self.dist_stamp[v as usize] == self.stamp { self.dist[v as usize] } else { UNSEEN }
+    }
+
+    #[inline]
+    fn set_dist(&mut self, v: u32, d: u32) {
+        self.dist_stamp[v as usize] = self.stamp;
+        self.dist[v as usize] = d;
+    }
+
+    #[inline]
+    fn mark_edge(&mut self, eid: u32) {
+        self.edge_stamp[eid as usize] = self.stamp;
+    }
+
+    #[inline]
+    fn edge_needed(&self, eid: usize) -> bool {
+        self.edge_stamp[eid] == self.stamp
+    }
+}
+
+/// Expand every partition of `assignment` to `hops`-hop self-sufficiency.
+///
+/// Sequential reference entry point: builds its own CSR and runs the
+/// partitions in order on this thread. `partition::build_partitions`
+/// shares one CSR across assignment + expansion and fans out on worker
+/// threads instead — see [`expand_with`].
+pub fn expand(g: &KnowledgeGraph, assignment: &EdgeAssignment, hops: usize) -> Vec<Partition> {
+    let csr = Csr::build(g.num_entities, &g.train);
+    expand_with(g, &csr, assignment, hops, 0)
+}
+
+/// Expand with a caller-provided CSR, fanning `expand_one` out across
+/// `build_threads` workers (0 = sequential reference path). Results are
+/// collected in fixed partition order and each worker reuses one
+/// [`ExpansionScratch`] across every partition it claims, so the output
+/// is **bit-identical** for any thread count (pinned by test).
+pub fn expand_with(
+    g: &KnowledgeGraph,
+    csr: &Csr,
+    assignment: &EdgeAssignment,
+    hops: usize,
+    build_threads: usize,
+) -> Vec<Partition> {
+    assert_eq!(assignment.assignment.len(), g.train.len());
+    let p = assignment.num_partitions;
+    let core_part_count = count_core_parts(g, assignment);
+
+    if build_threads == 0 || p <= 1 {
+        let mut scratch = ExpansionScratch::new(g.num_entities, g.train.len());
+        return (0..p)
+            .map(|part| expand_one(g, csr, assignment, part, hops, &core_part_count, &mut scratch))
+            .collect();
+    }
+
+    let cpc = &core_part_count;
+    pool::scoped_map(
+        build_threads.min(p),
+        p,
+        || ExpansionScratch::new(g.num_entities, g.train.len()),
+        move |scratch, part| expand_one(g, csr, assignment, part, hops, cpc, scratch),
+    )
+}
+
+/// How many partitions hold each vertex as a core endpoint — needed to
+/// distinguish Core from Replicated roles. One bitset pass: exact by
+/// construction (a vertex-partition bit is set at most once however many
+/// core edges repeat the pair).
+fn count_core_parts(g: &KnowledgeGraph, assignment: &EdgeAssignment) -> Vec<u32> {
+    let words = assignment.num_partitions.div_ceil(64);
+    let mut bits = vec![0u64; g.num_entities * words];
+    for (eid, e) in g.train.iter().enumerate() {
+        let part = assignment.assignment[eid] as usize;
+        for v in [e.s as usize, e.t as usize] {
+            bits[v * words + part / 64] |= 1 << (part % 64);
+        }
+    }
+    (0..g.num_entities)
+        .map(|v| bits[v * words..(v + 1) * words].iter().map(|w| w.count_ones()).sum())
+        .collect()
 }
 
 fn expand_one(
@@ -66,52 +151,57 @@ fn expand_one(
     part: usize,
     hops: usize,
     core_part_count: &[u32],
+    scratch: &mut ExpansionScratch,
 ) -> Partition {
-    const UNSEEN: u32 = u32::MAX;
-    let mut dist = vec![UNSEEN; g.num_entities];
-    let mut frontier: Vec<u32> = Vec::new();
+    scratch.begin();
     let mut core_edges = Vec::new();
+    let mut vertices: Vec<u32> = Vec::new();
 
     // Distance-0 layer: endpoints of this partition's core edges.
     for (eid, e) in g.train.iter().enumerate() {
         if assignment.assignment[eid] as usize == part {
             core_edges.push(*e);
             for v in [e.s, e.t] {
-                if dist[v as usize] == UNSEEN {
-                    dist[v as usize] = 0;
-                    frontier.push(v);
+                if scratch.dist(v) == UNSEEN {
+                    scratch.set_dist(v, 0);
+                    vertices.push(v);
                 }
             }
         }
     }
 
     // BFS out to `hops`, collecting needed edges: an edge is needed when
-    // first touched from an endpoint at distance <= hops-1.
-    let mut needed_edges: Vec<bool> = vec![false; g.train.len()];
-    let mut vertices: Vec<u32> = frontier.clone();
-    let mut current = frontier;
+    // first touched from an endpoint at distance <= hops-1. The frontier
+    // buffers are borrowed out of the scratch so the loop below can
+    // mutate stamps while iterating the current layer.
+    let mut current = std::mem::take(&mut scratch.frontier_a);
+    let mut next = std::mem::take(&mut scratch.frontier_b);
+    current.clear();
+    current.extend_from_slice(&vertices);
     for d in 0..hops as u32 {
-        let mut next: Vec<u32> = Vec::new();
+        next.clear();
         for &v in &current {
-            debug_assert_eq!(dist[v as usize], d);
-            for &eid in csr.out_edges(v).iter().chain(csr.in_edges(v)) {
-                needed_edges[eid as usize] = true;
+            debug_assert_eq!(scratch.dist(v), d);
+            for eid in csr.incident(v) {
+                scratch.mark_edge(eid);
                 let e = g.train[eid as usize];
                 let w = if e.s == v { e.t } else { e.s };
-                if dist[w as usize] == UNSEEN {
-                    dist[w as usize] = d + 1;
+                if scratch.dist(w) == UNSEEN {
+                    scratch.set_dist(w, d + 1);
                     next.push(w);
                     vertices.push(w);
                 }
             }
         }
-        current = next;
+        std::mem::swap(&mut current, &mut next);
     }
+    scratch.frontier_a = current;
+    scratch.frontier_b = next;
 
     // Support edges: needed but not core-of-this-partition.
     let mut support_edges = Vec::new();
-    for (eid, &needed) in needed_edges.iter().enumerate() {
-        if needed && assignment.assignment[eid] as usize != part {
+    for (eid, &owner) in assignment.assignment.iter().enumerate() {
+        if scratch.edge_needed(eid) && owner as usize != part {
             support_edges.push(g.train[eid]);
         }
     }
@@ -120,7 +210,7 @@ fn expand_one(
     let roles = vertices
         .iter()
         .map(|&v| {
-            if dist[v as usize] == 0 {
+            if scratch.dist(v) == 0 {
                 if core_part_count[v as usize] > 1 {
                     VertexRole::Replicated
                 } else {
@@ -156,7 +246,7 @@ mod tests {
             strategy: PartitionStrategy::Hdrf,
             num_partitions: 4,
             hops,
-            hdrf_lambda: 1.0,
+            ..Default::default()
         };
         let ps = partition::partition_graph(&g, &cfg, 11);
         (g, ps)
@@ -261,7 +351,8 @@ mod tests {
         let g = graph();
         for strategy in [PartitionStrategy::Hdrf, PartitionStrategy::Random] {
             let mk = |hops| {
-                let cfg = PartitionConfig { strategy, num_partitions: 4, hops, hdrf_lambda: 1.0 };
+                let cfg =
+                    PartitionConfig { strategy, num_partitions: 4, hops, ..Default::default() };
                 partition::partition_graph(&g, &cfg, 11)
             };
             let one = mk(1);
@@ -282,7 +373,7 @@ mod tests {
                 strategy: PartitionStrategy::Hdrf,
                 num_partitions: 4,
                 hops: 2,
-                hdrf_lambda: 1.0,
+                ..Default::default()
             },
             11,
         );
@@ -291,5 +382,84 @@ mod tests {
             assert!(p.support_edges.is_empty());
             assert!(p.roles.iter().all(|r| !matches!(r, VertexRole::Support)));
         }
+    }
+
+    /// Tentpole invariant: threaded expansion (any worker count, each
+    /// worker's scratch reused across the partitions it claims) is
+    /// bit-identical to the sequential `build_threads = 0` reference —
+    /// vertices, roles, core/support edges, and their order.
+    #[test]
+    fn threaded_expansion_bit_identical_to_sequential() {
+        let g = graph();
+        for strategy in [
+            PartitionStrategy::Hdrf,
+            PartitionStrategy::Random,
+            PartitionStrategy::MetisLike,
+        ] {
+            for hops in [1usize, 2] {
+                let cfg =
+                    PartitionConfig { strategy, num_partitions: 4, hops, ..Default::default() };
+                let a = partition::assign_edges(&g, &cfg, 11);
+                let csr = Csr::build(g.num_entities, &g.train);
+                let want = expand_with(&g, &csr, &a, hops, 0);
+                for threads in [1usize, 2, 3, 8] {
+                    let got = expand_with(&g, &csr, &a, hops, threads);
+                    assert_eq!(got, want, "{strategy:?} hops={hops} threads={threads}");
+                }
+            }
+        }
+    }
+
+    /// A shared scratch reused across partitions (and re-used for a
+    /// partition it already expanded) yields exactly what fresh
+    /// per-partition scratch does — the stamp bump really isolates runs.
+    #[test]
+    fn scratch_reuse_is_stateless_across_partitions() {
+        let g = graph();
+        let cfg = PartitionConfig {
+            strategy: PartitionStrategy::Hdrf,
+            num_partitions: 4,
+            hops: 2,
+            ..Default::default()
+        };
+        let a = partition::assign_edges(&g, &cfg, 11);
+        let csr = Csr::build(g.num_entities, &g.train);
+        let cpc = count_core_parts(&g, &a);
+        let fresh: Vec<Partition> = (0..4)
+            .map(|part| {
+                let mut s = ExpansionScratch::new(g.num_entities, g.train.len());
+                expand_one(&g, &csr, &a, part, 2, &cpc, &mut s)
+            })
+            .collect();
+        let mut shared = ExpansionScratch::new(g.num_entities, g.train.len());
+        for (part, want) in fresh.iter().enumerate() {
+            let got = expand_one(&g, &csr, &a, part, 2, &cpc, &mut shared);
+            assert_eq!(&got, want, "shared scratch diverged at partition {part}");
+        }
+        let again = expand_one(&g, &csr, &a, 0, 2, &cpc, &mut shared);
+        assert_eq!(&again, &fresh[0], "re-expansion on a dirty scratch diverged");
+    }
+
+    /// Stamp wraparound hard-resets the arena instead of colliding with
+    /// stale entries from 2^32 expansions ago.
+    #[test]
+    fn stamp_wraparound_resets_cleanly() {
+        let g = graph();
+        let cfg = PartitionConfig {
+            strategy: PartitionStrategy::Hdrf,
+            num_partitions: 2,
+            hops: 2,
+            ..Default::default()
+        };
+        let a = partition::assign_edges(&g, &cfg, 11);
+        let csr = Csr::build(g.num_entities, &g.train);
+        let cpc = count_core_parts(&g, &a);
+        let mut s = ExpansionScratch::new(g.num_entities, g.train.len());
+        let want0 = expand_one(&g, &csr, &a, 0, 2, &cpc, &mut s);
+        let want1 = expand_one(&g, &csr, &a, 1, 2, &cpc, &mut s);
+        s.stamp = u32::MAX - 1; // next begin() lands on MAX, then wraps
+        assert_eq!(expand_one(&g, &csr, &a, 0, 2, &cpc, &mut s), want0);
+        assert_eq!(expand_one(&g, &csr, &a, 1, 2, &cpc, &mut s), want1);
+        assert_eq!(expand_one(&g, &csr, &a, 0, 2, &cpc, &mut s), want0);
     }
 }

@@ -16,7 +16,14 @@
 //!
 //! [`stats`] computes the paper's partition-quality metrics (core/total
 //! edges, replication factor RF of Eq. 7) that fill Tables 2 and 5.
+//!
+//! [`build_partitions`] is the production entry point: it shares one CSR
+//! between assignment and expansion, fans expansion out across
+//! `partition.build_threads` workers (bit-identical to sequential), and
+//! memoizes the whole build in an on-disk [`cache`] keyed by graph
+//! content + config + seed, reporting per-stage timings.
 
+pub mod cache;
 pub mod edge_cut;
 pub mod expansion;
 pub mod random;
@@ -24,7 +31,9 @@ pub mod stats;
 pub mod vertex_cut;
 
 use crate::config::{PartitionConfig, PartitionStrategy};
-use crate::graph::{KnowledgeGraph, Triple};
+use crate::graph::{Csr, KnowledgeGraph, Triple};
+use crate::util::timer::Stopwatch;
+use std::path::PathBuf;
 
 /// Which role a vertex plays inside one partition (paper §3.2.1-3.2.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,7 +50,7 @@ pub enum VertexRole {
 ///
 /// Vertices and edges are stored with *global* ids; `local_of`/`vertices`
 /// provide the dense local numbering used to build compute graphs.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Partition {
     pub id: usize,
     /// Global ids of every vertex present (core ∪ replicated ∪ support),
@@ -81,7 +90,7 @@ impl Partition {
 
 /// An edge-disjoint pre-expansion assignment: `assignment[i]` = partition
 /// of train edge `i`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct EdgeAssignment {
     pub num_partitions: usize,
     pub assignment: Vec<u32>,
@@ -99,10 +108,138 @@ pub fn assign_edges(g: &KnowledgeGraph, cfg: &PartitionConfig, seed: u64) -> Edg
     }
 }
 
+/// [`assign_edges`] over a caller-provided CSR, so one CSR build serves
+/// both assignment and expansion. Bit-identical to [`assign_edges`]:
+/// each strategy's `_with` variant reads the same degrees/adjacency it
+/// would have rebuilt itself (Random never needed them).
+pub fn assign_edges_with(
+    g: &KnowledgeGraph,
+    csr: &Csr,
+    cfg: &PartitionConfig,
+    seed: u64,
+) -> EdgeAssignment {
+    match cfg.strategy {
+        PartitionStrategy::Hdrf => {
+            vertex_cut::hdrf_with(g, csr, cfg.num_partitions, cfg.hdrf_lambda, seed)
+        }
+        PartitionStrategy::Dbh => vertex_cut::dbh_with(g, csr, cfg.num_partitions),
+        PartitionStrategy::MetisLike => {
+            edge_cut::metis_like_with(g, csr, cfg.num_partitions, seed)
+        }
+        PartitionStrategy::Random => random::random(g, cfg.num_partitions, seed),
+    }
+}
+
 /// Full two-phase pipeline: assignment + neighborhood expansion.
+///
+/// Kept as the simple no-cache, no-stats entry point for tests and
+/// one-shot callers; [`build_partitions`] is the production path.
 pub fn partition_graph(g: &KnowledgeGraph, cfg: &PartitionConfig, seed: u64) -> Vec<Partition> {
-    let assignment = assign_edges(g, cfg, seed);
-    expansion::expand(g, &assignment, cfg.hops)
+    let csr = Csr::build(g.num_entities, &g.train);
+    let assignment = assign_edges_with(g, &csr, cfg, seed);
+    expansion::expand_with(g, &csr, &assignment, cfg.hops, cfg.build_threads)
+}
+
+/// How one partition build went: wall time, per-stage breakdown, and
+/// cache outcome. Reported next to the replication-factor stats.
+#[derive(Clone, Debug, Default)]
+pub struct PartitionBuildStats {
+    pub wall_secs: f64,
+    /// Edge-assignment stage (includes the shared CSR build).
+    pub assign_secs: f64,
+    /// Neighborhood-expansion stage.
+    pub expand_secs: f64,
+    /// Cache probe + load/save time.
+    pub cache_io_secs: f64,
+    pub cache_hit: bool,
+    /// Cache file used (read or written); `None` when caching is off.
+    pub cache_path: Option<PathBuf>,
+    pub build_threads: usize,
+}
+
+impl PartitionBuildStats {
+    /// One-line human summary for run logs.
+    pub fn summary(&self) -> String {
+        let cache = match (&self.cache_path, self.cache_hit) {
+            (None, _) => "off".to_string(),
+            (Some(p), true) => format!("hit {}", p.display()),
+            (Some(p), false) => format!("miss -> wrote {}", p.display()),
+        };
+        format!(
+            "partition build {:.3}s (assign {:.3}s, expand {:.3}s, cache-io {:.3}s, \
+             threads {}, cache {})",
+            self.wall_secs,
+            self.assign_secs,
+            self.expand_secs,
+            self.cache_io_secs,
+            self.build_threads,
+            cache
+        )
+    }
+}
+
+/// Production partition build: cache probe, shared-CSR assignment,
+/// multi-threaded expansion, cache write-back — with per-stage timings.
+///
+/// The output `Vec<Partition>` is bit-identical to
+/// [`partition_graph`] (and to a `build_threads = 0` sequential build)
+/// whether it was rebuilt or loaded from cache. Cache problems are
+/// never fatal: a stale, corrupt, or unwritable entry logs a warning
+/// and the build proceeds from scratch.
+pub fn build_partitions(
+    g: &KnowledgeGraph,
+    cfg: &PartitionConfig,
+    seed: u64,
+) -> (Vec<Partition>, PartitionBuildStats) {
+    let wall = Stopwatch::new();
+    let mut stats = PartitionBuildStats { build_threads: cfg.build_threads, ..Default::default() };
+
+    let cache_target = if cfg.cache_dir.is_empty() {
+        None
+    } else {
+        let key = cache::cache_key(g, cfg, seed);
+        Some((key, cache::cache_file(std::path::Path::new(&cfg.cache_dir), cfg, key)))
+    };
+
+    if let Some((key, path)) = &cache_target {
+        let mut sw = Stopwatch::new();
+        if path.exists() {
+            match cache::load(path, *key, g, cfg) {
+                Ok((_assignment, parts)) => {
+                    stats.cache_io_secs = sw.lap_secs();
+                    stats.cache_hit = true;
+                    stats.cache_path = Some(path.clone());
+                    stats.wall_secs = wall.elapsed_secs();
+                    return (parts, stats);
+                }
+                Err(e) => {
+                    crate::log_warn!(
+                        "partition cache at {} unusable ({e:#}); rebuilding",
+                        path.display()
+                    );
+                }
+            }
+        }
+        stats.cache_io_secs += sw.lap_secs();
+    }
+
+    let mut sw = Stopwatch::new();
+    let csr = Csr::build(g.num_entities, &g.train);
+    let assignment = assign_edges_with(g, &csr, cfg, seed);
+    stats.assign_secs = sw.lap_secs();
+    let parts = expansion::expand_with(g, &csr, &assignment, cfg.hops, cfg.build_threads);
+    stats.expand_secs = sw.lap_secs();
+
+    if let Some((key, path)) = &cache_target {
+        if let Err(e) = cache::save(path, *key, cfg, seed, &assignment, &parts) {
+            crate::log_warn!("failed to write partition cache {} ({e:#})", path.display());
+        } else {
+            stats.cache_path = Some(path.clone());
+        }
+        stats.cache_io_secs += sw.lap_secs();
+    }
+    stats.wall_secs = wall.elapsed_secs();
+    (parts, stats)
 }
 
 #[cfg(test)]
@@ -120,7 +257,8 @@ mod tests {
             PartitionStrategy::MetisLike,
             PartitionStrategy::Random,
         ] {
-            let cfg = PartitionConfig { strategy, num_partitions: 4, hops: 2, hdrf_lambda: 1.0 };
+            let cfg =
+                PartitionConfig { strategy, num_partitions: 4, hops: 2, ..Default::default() };
             let parts = partition_graph(&g, &cfg, 42);
             assert_eq!(parts.len(), 4, "{strategy:?}");
             let total_core: usize = parts.iter().map(|p| p.core_edges.len()).sum();
@@ -138,12 +276,7 @@ mod tests {
     #[test]
     fn single_partition_is_whole_graph() {
         let g = generator::generate(&ExperimentConfig::tiny().dataset);
-        let cfg = PartitionConfig {
-            strategy: PartitionStrategy::Hdrf,
-            num_partitions: 1,
-            hops: 2,
-            hdrf_lambda: 1.0,
-        };
+        let cfg = PartitionConfig { num_partitions: 1, ..Default::default() };
         let parts = partition_graph(&g, &cfg, 1);
         assert_eq!(parts.len(), 1);
         assert_eq!(parts[0].core_edges.len(), g.train.len());
@@ -153,12 +286,7 @@ mod tests {
     #[test]
     fn local_of_roundtrips() {
         let g = generator::generate(&ExperimentConfig::tiny().dataset);
-        let cfg = PartitionConfig {
-            strategy: PartitionStrategy::Hdrf,
-            num_partitions: 2,
-            hops: 2,
-            hdrf_lambda: 1.0,
-        };
+        let cfg = PartitionConfig { num_partitions: 2, ..Default::default() };
         let parts = partition_graph(&g, &cfg, 1);
         for p in &parts {
             for (local, &global) in p.vertices.iter().enumerate() {
@@ -166,5 +294,88 @@ mod tests {
             }
             assert_eq!(p.local_of(u32::MAX), None);
         }
+    }
+
+    fn cache_cfg(tag: &str) -> PartitionConfig {
+        let dir = std::env::temp_dir()
+            .join(format!("kgscale-buildcache-{tag}-{}", std::process::id()));
+        PartitionConfig {
+            num_partitions: 4,
+            cache_dir: dir.to_string_lossy().into_owned(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn build_partitions_matches_partition_graph_and_hits_cache() {
+        let g = generator::generate(&ExperimentConfig::tiny().dataset);
+        let cfg = cache_cfg("roundtrip");
+        let reference = partition_graph(&g, &cfg, 42);
+
+        let (cold, s1) = build_partitions(&g, &cfg, 42);
+        assert_eq!(cold, reference, "rebuilt output must match the plain pipeline");
+        assert!(!s1.cache_hit, "first build must miss");
+        let path = s1.cache_path.clone().expect("cache write should have succeeded");
+        assert!(path.exists());
+
+        let (warm, s2) = build_partitions(&g, &cfg, 42);
+        assert_eq!(warm, reference, "cached output must be bit-identical");
+        assert!(s2.cache_hit, "second build must hit");
+        assert!(s2.summary().contains("cache hit"), "got: {}", s2.summary());
+
+        std::fs::remove_dir_all(std::path::Path::new(&cfg.cache_dir)).unwrap();
+    }
+
+    #[test]
+    fn build_partitions_without_cache_dir_skips_cache() {
+        let g = generator::generate(&ExperimentConfig::tiny().dataset);
+        let cfg = PartitionConfig { num_partitions: 2, ..Default::default() };
+        let (parts, stats) = build_partitions(&g, &cfg, 7);
+        assert_eq!(parts, partition_graph(&g, &cfg, 7));
+        assert!(!stats.cache_hit);
+        assert!(stats.cache_path.is_none());
+        assert!(stats.summary().contains("cache off"));
+    }
+
+    #[test]
+    fn corrupt_cache_falls_back_to_rebuild() {
+        let g = generator::generate(&ExperimentConfig::tiny().dataset);
+        let cfg = cache_cfg("corrupt");
+        let (reference, s1) = build_partitions(&g, &cfg, 9);
+        let path = s1.cache_path.clone().unwrap();
+        std::fs::write(&path, b"definitely not a partition cache").unwrap();
+
+        let (parts, s2) = build_partitions(&g, &cfg, 9);
+        assert_eq!(parts, reference, "corrupt cache must rebuild identically");
+        assert!(!s2.cache_hit, "corrupt entry must count as a miss");
+        // The rebuild overwrote the bad entry, so a third build hits.
+        let (_, s3) = build_partitions(&g, &cfg, 9);
+        assert!(s3.cache_hit);
+
+        std::fs::remove_dir_all(std::path::Path::new(&cfg.cache_dir)).unwrap();
+    }
+
+    #[test]
+    fn changed_seed_or_config_misses_cache() {
+        let g = generator::generate(&ExperimentConfig::tiny().dataset);
+        let cfg = cache_cfg("miss");
+        let (_, s1) = build_partitions(&g, &cfg, 1);
+        assert!(!s1.cache_hit);
+
+        // Different seed -> different key -> different file -> miss.
+        let (_, s2) = build_partitions(&g, &cfg, 2);
+        assert!(!s2.cache_hit);
+        assert_ne!(s1.cache_path, s2.cache_path);
+
+        // Different expansion depth -> miss (hops is in both key and name).
+        let cfg_h1 = PartitionConfig { hops: 1, ..cfg.clone() };
+        let (_, s3) = build_partitions(&g, &cfg_h1, 1);
+        assert!(!s3.cache_hit);
+
+        // Unchanged inputs still hit.
+        let (_, s4) = build_partitions(&g, &cfg, 1);
+        assert!(s4.cache_hit);
+
+        std::fs::remove_dir_all(std::path::Path::new(&cfg.cache_dir)).unwrap();
     }
 }

@@ -82,7 +82,7 @@ mod tests {
         dcfg.entities = 800;
         dcfg.train_edges = 6000;
         let g = generator::generate(&dcfg);
-        let cfg = PartitionConfig { strategy, num_partitions: p, hops: 2, hdrf_lambda: 1.0 };
+        let cfg = PartitionConfig { strategy, num_partitions: p, ..Default::default() };
         let parts = partition::partition_graph(&g, &cfg, 3);
         compute(&parts, g.num_entities)
     }

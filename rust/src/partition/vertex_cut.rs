@@ -19,7 +19,7 @@
 //!   worse RF; used as an ablation baseline.
 
 use super::EdgeAssignment;
-use crate::graph::KnowledgeGraph;
+use crate::graph::{Csr, KnowledgeGraph};
 use crate::util::rng::Rng;
 
 /// HDRF greedy streaming partitioner.
@@ -36,10 +36,32 @@ use crate::util::rng::Rng;
 /// λ: pure balance). The edge stream order is shuffled deterministically
 /// from `seed`, as streaming partitioners are order-sensitive.
 pub fn hdrf(g: &KnowledgeGraph, num_partitions: usize, lambda: f64, seed: u64) -> EdgeAssignment {
+    hdrf_impl(g, g.degrees(), num_partitions, lambda, seed)
+}
+
+/// [`hdrf`] with degrees read off a caller-provided CSR (identical
+/// values — same train edges — so the assignment is bit-identical),
+/// skipping the extra O(E) degree-counting pass.
+pub fn hdrf_with(
+    g: &KnowledgeGraph,
+    csr: &Csr,
+    num_partitions: usize,
+    lambda: f64,
+    seed: u64,
+) -> EdgeAssignment {
+    hdrf_impl(g, csr.degrees(), num_partitions, lambda, seed)
+}
+
+fn hdrf_impl(
+    g: &KnowledgeGraph,
+    degrees: Vec<u32>,
+    num_partitions: usize,
+    lambda: f64,
+    seed: u64,
+) -> EdgeAssignment {
     let p = num_partitions;
     assert!(p >= 1);
     let n = g.num_entities;
-    let degrees: Vec<u32> = g.degrees();
 
     // replicas[v] = bitset over partitions (supports arbitrary P via Vec).
     let words = p.div_ceil(64);
@@ -110,7 +132,15 @@ pub fn hdrf(g: &KnowledgeGraph, num_partitions: usize, lambda: f64, seed: u64) -
 
 /// DBH: assign edge (u, v) to `hash(argmin-degree endpoint) % P`.
 pub fn dbh(g: &KnowledgeGraph, num_partitions: usize) -> EdgeAssignment {
-    let degrees = g.degrees();
+    dbh_impl(g, g.degrees(), num_partitions)
+}
+
+/// [`dbh`] with degrees read off a caller-provided CSR (bit-identical).
+pub fn dbh_with(g: &KnowledgeGraph, csr: &Csr, num_partitions: usize) -> EdgeAssignment {
+    dbh_impl(g, csr.degrees(), num_partitions)
+}
+
+fn dbh_impl(g: &KnowledgeGraph, degrees: Vec<u32>, num_partitions: usize) -> EdgeAssignment {
     let assignment = g
         .train
         .iter()
@@ -233,5 +263,13 @@ mod tests {
         let g = graph();
         assert!(hdrf(&g, 1, 1.0, 0).assignment.iter().all(|&p| p == 0));
         assert!(dbh(&g, 1).assignment.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn shared_csr_variants_are_identical() {
+        let g = graph();
+        let csr = Csr::build(g.num_entities, &g.train);
+        assert_eq!(hdrf_with(&g, &csr, 4, 1.0, 9).assignment, hdrf(&g, 4, 1.0, 9).assignment);
+        assert_eq!(dbh_with(&g, &csr, 8).assignment, dbh(&g, 8).assignment);
     }
 }

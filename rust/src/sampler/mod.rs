@@ -84,8 +84,7 @@ mod tests {
         let cfg = PartitionConfig {
             strategy: PartitionStrategy::Hdrf,
             num_partitions: p,
-            hops: 2,
-            hdrf_lambda: 1.0,
+            ..Default::default()
         };
         let parts = partition::partition_graph(&g, &cfg, 5);
         let ctxs = parts.iter().map(PartContext::new).collect();

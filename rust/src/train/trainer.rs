@@ -172,7 +172,8 @@ impl<'rt> Trainer<'rt> {
         );
         let mut pcfg = cfg.partition.clone();
         pcfg.num_partitions = cfg.train.num_trainers;
-        let parts = partition::partition_graph(graph, &pcfg, cfg.dataset.seed);
+        let (parts, build) = partition::build_partitions(graph, &pcfg, cfg.dataset.seed);
+        crate::log_info!("{}", build.summary());
         let scope = if cfg.train.local_negatives { Scope::LocalCore } else { Scope::Global };
         let workers = parts
             .iter()

@@ -11,11 +11,70 @@
 //! [`train::pipeline`]: crate::train::pipeline
 //! [`eval::pipeline`]: crate::eval::pipeline
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// One-shot scoped fan-out over indices `0..n`, the build-stage
+/// counterpart of [`HostPool`].
+///
+/// [`HostPool`] jobs must be `'static`, which suits the steady-state
+/// train/eval loops (plain-data closures, `Arc`-shared inputs) but not
+/// one-shot preprocessing that borrows large read-only state from the
+/// caller's stack (graph, CSR, edge assignment). `scoped_map` runs the
+/// same claim-next-index discipline on transient `std::thread::scope`
+/// workers, which may borrow: every worker joins before this function
+/// returns.
+///
+/// Each worker builds one `state` via `init` and reuses it across every
+/// index it claims (work stealing over a shared atomic cursor) — the
+/// hook for arena-style scratch that must not be reallocated per item.
+/// Results are collected **in index order**, never completion order, so
+/// the output is identical for any `threads` count.
+pub fn scoped_map<T, S>(
+    threads: usize,
+    n: usize,
+    init: impl Fn() -> S + Sync,
+    work: impl Fn(&mut S, usize) -> T + Sync,
+) -> Vec<T>
+where
+    T: Send,
+{
+    assert!(threads > 0, "scoped_map needs at least one worker thread");
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            let tx = tx.clone();
+            let next = &next;
+            let init = &init;
+            let work = &work;
+            s.spawn(move || {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let item = work(&mut state, i);
+                    if tx.send((i, item)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+        for (i, item) in rx {
+            out[i] = Some(item);
+        }
+    });
+    out.into_iter().map(|item| item.expect("scoped_map produced every index")).collect()
+}
 
 /// A persistent pool of host threads fed over an mpsc channel.
 ///
@@ -104,5 +163,39 @@ mod tests {
         assert_eq!(got, (0..64).collect::<Vec<_>>());
         assert_eq!(counter.load(Ordering::SeqCst), 64);
         drop(pool); // joins cleanly once the queue has drained
+    }
+
+    #[test]
+    fn scoped_map_orders_results_and_reuses_state() {
+        // Borrow caller-stack data (the whole point vs HostPool)...
+        let inputs: Vec<usize> = (0..40).collect();
+        // ...and count state constructions: one per worker, not per item.
+        let states = AtomicUsize::new(0);
+        for threads in [1usize, 3, 8, 64] {
+            let got = scoped_map(
+                threads,
+                inputs.len(),
+                || {
+                    states.fetch_add(1, Ordering::SeqCst);
+                    0usize // per-worker accumulator, reused across items
+                },
+                |acc, i| {
+                    *acc += 1;
+                    inputs[i] * 2
+                },
+            );
+            let want: Vec<usize> = inputs.iter().map(|x| x * 2).collect();
+            assert_eq!(got, want, "threads={threads}: results must be in index order");
+        }
+        assert!(
+            states.load(Ordering::SeqCst) <= 1 + 3 + 8 + 40,
+            "states are per-worker (capped at min(threads, n)), never per item"
+        );
+    }
+
+    #[test]
+    fn scoped_map_empty_range() {
+        let got: Vec<u32> = scoped_map(4, 0, || (), |_, _| unreachable!());
+        assert!(got.is_empty());
     }
 }

@@ -27,7 +27,7 @@ fn prop_partition_disjoint_cover() {
             PartitionStrategy::MetisLike,
             PartitionStrategy::Random,
         ] {
-            let cfg = PartitionConfig { strategy, num_partitions: p, hops: 2, hdrf_lambda: 1.0 };
+            let cfg = PartitionConfig { strategy, num_partitions: p, ..Default::default() };
             let parts = partition::partition_graph(&g, &cfg, rng.next_u64());
             let mut seen: HashSet<u64> = HashSet::new();
             let mut total = 0;
@@ -54,7 +54,7 @@ fn prop_expansion_self_sufficiency() {
             strategy: PartitionStrategy::Hdrf,
             num_partitions: p,
             hops,
-            hdrf_lambda: 1.0,
+            ..Default::default()
         };
         let parts = partition::partition_graph(&g, &cfg, rng.next_u64());
         let csr = kgscale::graph::Csr::build(g.num_entities, &g.train);
@@ -108,8 +108,7 @@ fn prop_negative_sampler_domain() {
         let cfg = PartitionConfig {
             strategy: PartitionStrategy::Hdrf,
             num_partitions: p,
-            hops: 2,
-            hdrf_lambda: 1.0,
+            ..Default::default()
         };
         let parts = partition::partition_graph(&g, &cfg, rng.next_u64());
         for part in &parts {
@@ -136,8 +135,7 @@ fn prop_batching_partition_of_epoch() {
         let cfg = PartitionConfig {
             strategy: PartitionStrategy::Hdrf,
             num_partitions: 1 + rng.below(4),
-            hops: 2,
-            hdrf_lambda: 1.0,
+            ..Default::default()
         };
         let parts = partition::partition_graph(&g, &cfg, 7);
         let ctx = PartContext::new(&parts[0]);
@@ -163,8 +161,7 @@ fn prop_compute_graph_well_formed() {
         let cfg = PartitionConfig {
             strategy: PartitionStrategy::Hdrf,
             num_partitions: 1 + rng.below(3),
-            hops: 2,
-            hdrf_lambda: 1.0,
+            ..Default::default()
         };
         let parts = partition::partition_graph(&g, &cfg, 3);
         for part in parts.iter().take(2) {
@@ -234,8 +231,7 @@ fn prop_batch_accessor_matches_iteration() {
         let cfg = PartitionConfig {
             strategy: PartitionStrategy::Hdrf,
             num_partitions: 1 + rng.below(3),
-            hops: 2,
-            hdrf_lambda: 1.0,
+            ..Default::default()
         };
         let parts = partition::partition_graph(&g, &cfg, rng.next_u64());
         let ctx = PartContext::new(&parts[0]);
@@ -304,8 +300,7 @@ fn prop_pipeline_determinism() {
             let cfg = PartitionConfig {
                 strategy: PartitionStrategy::Hdrf,
                 num_partitions: 3,
-                hops: 2,
-                hdrf_lambda: 1.0,
+                ..Default::default()
             };
             let parts = partition::partition_graph(g, &cfg, seed);
             let ctx = PartContext::new(&parts[1]);
