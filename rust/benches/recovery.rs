@@ -1,0 +1,152 @@
+//! Bench: crash-consistent checkpointing and fault recovery.
+//!
+//! Part A (always runs): checkpoint v3 save/load round-trip cost at
+//! embedding-table sizes of 100k and 1M parameters — the atomic
+//! tmp+rename write with the FNV-1a footer vs the checksum-verifying
+//! read. This is the per-boundary cost `train.checkpoint_every_epochs`
+//! charges and the read half of every crash recovery.
+//! Part B (needs `make artifacts`): full `train_epoch` wall/virtual
+//! time, fault-free vs an aggressive seeded fault plan with recovery,
+//! reporting the recovery/checkpoint accounting the trainer emits.
+//!
+//! Writes a machine-readable summary to `BENCH_recovery.json` (path
+//! overridable via the `BENCH_RECOVERY_JSON` env var) for
+//! `scripts/run_benches.sh`.
+
+use kgscale::config::{ExperimentConfig, GradMode, GradSync};
+use kgscale::graph::generator;
+use kgscale::model::Manifest;
+use kgscale::runtime::Runtime;
+use kgscale::train::{checkpoint, Trainer};
+use kgscale::util::bench::{bench, BenchResult};
+use kgscale::util::json::Json;
+use kgscale::util::rng::Rng;
+use std::path::Path;
+
+fn json_result(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(r.name.clone())),
+        ("mean_secs", Json::Num(r.mean_secs)),
+        ("std_secs", Json::Num(r.std_secs)),
+        ("min_secs", Json::Num(r.min_secs)),
+        ("iters", Json::Num(r.iters as f64)),
+    ])
+}
+
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("kgscale-bench-recovery-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).expect("create bench scratch dir");
+    d
+}
+
+/// Part A: checkpoint save/load round trips, no XLA artifacts needed.
+fn bench_checkpoint_io(results: &mut Vec<Json>) {
+    println!("== checkpoint v3 save/load (atomic rename + FNV-1a footer) ==");
+    let dir = scratch_dir("io");
+    for n in [100_000usize, 1_000_000] {
+        let mut rng = Rng::seeded(0xC4EC);
+        let params: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let m = vec![0.01f32; n];
+        let v = vec![0.002f32; n];
+        let label = if n >= 1_000_000 { "1M" } else { "100k" };
+        let path = dir.join(format!("bench-{label}.ckpt"));
+
+        let save = bench(&format!("checkpoint-save/{label}"), 0.5, || {
+            checkpoint::save(&path, &params, &m, &v, 42, GradMode::Sparse, 7).unwrap();
+        });
+        results.push(json_result(&save));
+
+        let load = bench(&format!("checkpoint-load/{label}"), 0.5, || {
+            let ck = checkpoint::load(&path).unwrap();
+            std::hint::black_box(ck.params.len());
+        });
+        results.push(json_result(&load));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Part B: train_epoch under a fault plan vs fault-free, with the
+/// recovery accounting the trainer reports.
+fn bench_faulted_epochs(results: &mut Vec<Json>) {
+    let dir = Path::new("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP faulted train_epoch bench: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(dir).unwrap();
+    let runtime = Runtime::new(dir).unwrap();
+    let base = ExperimentConfig::tiny();
+    let g = generator::generate(&base.dataset);
+
+    println!("== train_epoch: fault-free vs crash/straggler plan with recovery ==");
+    println!(
+        "{:<26} {:>12} {:>12} {:>10} {:>12} {:>12}",
+        "config", "wall epoch", "virt epoch", "crashes", "recovery", "ckpt write"
+    );
+    for faulted in [false, true] {
+        let ckpt_dir = scratch_dir(if faulted { "faulted" } else { "clean" });
+        let mut c = base.clone();
+        c.train.batch_edges = 64;
+        c.train.num_trainers = 2;
+        c.train.grad_sync = GradSync::Ring;
+        if faulted {
+            c.train.checkpoint_every_epochs = 1;
+            c.train.checkpoint_dir = ckpt_dir.to_string_lossy().into_owned();
+            c.faults.enabled = true;
+            c.faults.crash_rate = 0.1;
+            c.faults.straggler_rate = 0.5;
+            c.faults.link_degrade_rate = 0.5;
+        }
+        let mut t = Trainer::new(c, &g, &runtime, manifest.clone()).unwrap();
+        // Warm epoch (JIT load, allocator churn) before measuring.
+        t.train_epoch().unwrap();
+        let (mut wall, mut virt, mut recov, mut ckpt) = (0.0, 0.0, 0.0, 0.0);
+        let mut crashes = 0usize;
+        let epochs = 3;
+        for _ in 0..epochs {
+            let r = t.train_epoch().unwrap();
+            wall += r.wall_secs;
+            virt += r.virtual_secs;
+            recov += r.recovery_secs;
+            ckpt += r.checkpoint_write_secs;
+            crashes += r.fault_recoveries;
+        }
+        let n = epochs as f64;
+        let name = if faulted { "train-epoch/faulted" } else { "train-epoch/fault-free" };
+        println!(
+            "{:<26} {:>11.4}s {:>11.4}s {:>10} {:>11.4}s {:>11.4}s",
+            name,
+            wall / n,
+            virt / n,
+            crashes,
+            recov / n,
+            ckpt / n
+        );
+        results.push(Json::obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("wall_epoch_secs", Json::Num(wall / n)),
+            ("virtual_epoch_secs", Json::Num(virt / n)),
+            ("crashes", Json::Num(crashes as f64)),
+            ("recovery_secs_per_epoch", Json::Num(recov / n)),
+            ("checkpoint_write_secs_per_epoch", Json::Num(ckpt / n)),
+        ]));
+        let _ = std::fs::remove_dir_all(&ckpt_dir);
+    }
+}
+
+fn main() {
+    let mut results = Vec::new();
+    bench_checkpoint_io(&mut results);
+    bench_faulted_epochs(&mut results);
+    let out = Json::obj(vec![
+        ("bench", Json::Str("recovery".to_string())),
+        ("tier", Json::Str("tiny".to_string())),
+        ("results", Json::Arr(results)),
+    ]);
+    let path =
+        std::env::var("BENCH_RECOVERY_JSON").unwrap_or_else(|_| "BENCH_recovery.json".to_string());
+    std::fs::write(&path, out.to_string_pretty()).expect("write bench json");
+    println!("wrote {path}");
+}

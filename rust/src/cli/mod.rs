@@ -108,7 +108,11 @@ COMMANDS
                                plus build breakdown (N=0: sequential;
                                DIR caches builds keyed by graph+config+seed)
   train     --config C [--trainers P] [--epochs N] [--eval-every K]
-                               train and report loss/MRR
+            [--resume DIR] [--checkpoint-dir DIR] [--checkpoint-every K]
+                               train and report loss/MRR; --resume
+                               continues from the newest checkpoint in
+                               DIR, --checkpoint-dir/--checkpoint-every
+                               override the [train] checkpoint keys
   experiment <table1|table2|table3|table4|table5|fig2|fig6|fig7|all>
             --config C [--trainers 1,2,4,8] [--epochs N] ...
                                regenerate a paper table/figure

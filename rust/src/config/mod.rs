@@ -173,6 +173,67 @@ pub struct TrainConfig {
     /// (bounds buffered batches per worker). Must be >= 1; only takes
     /// effect with `host_threads > 0`.
     pub prefetch_depth: usize,
+    /// Atomic checkpoint cadence: snapshot params + Adam state every k
+    /// epoch boundaries (`train::checkpoint` v3, tmp + rename +
+    /// checksum). 0 = checkpointing off. Required (>0) when
+    /// `faults.crash_rate > 0` — crash recovery restores from the last
+    /// snapshot.
+    pub checkpoint_every_epochs: usize,
+    /// Directory for `ckpt-NNNNNN.ckpt` snapshots; must be non-empty
+    /// when `checkpoint_every_epochs > 0`. Also the target of
+    /// `kgscale train --resume <dir>`.
+    pub checkpoint_dir: String,
+    /// Retention: keep the newest K snapshots, prune the rest (>= 1).
+    pub checkpoint_keep: usize,
+}
+
+/// Deterministic fault injection on the simulated cluster
+/// (`train::faults`). Disabled by default; when `enabled`, a seeded
+/// `FaultPlan` schedules worker crashes, straggler slowdowns, and
+/// transient sync-link degradation per epoch, fully reproducible from
+/// `seed`. With `enabled = false` the trainer takes the exact
+/// pre-fault-layer code path (bit-identical results, pinned by test).
+#[derive(Clone, Debug)]
+pub struct FaultsConfig {
+    pub enabled: bool,
+    /// Seed of the fault schedule stream — independent of `train.seed`,
+    /// so faults never perturb sampling/init RNG.
+    pub seed: u64,
+    /// Per (step, worker) Bernoulli probability of a crash; at most one
+    /// crash is scheduled per epoch (the first success). In [0, 1].
+    pub crash_rate: f64,
+    /// Per (epoch, worker) probability of a straggler window. In [0, 1].
+    pub straggler_rate: f64,
+    /// Compute-time multiplier inside a straggler window (>= 1).
+    pub slowdown_factor: f64,
+    /// Straggler window length in steps (clamped to the epoch).
+    pub straggler_steps: usize,
+    /// Per-epoch probability of a sync-link degradation window. In [0, 1].
+    pub link_degrade_rate: f64,
+    /// Multiplier on modeled α/β sync cost inside the window (>= 1).
+    pub link_degrade_factor: f64,
+    /// Link-degradation window length in steps (clamped to the epoch).
+    pub link_degrade_steps: usize,
+    /// Virtual seconds the synchronous barrier takes to declare a
+    /// replica dead (failure-detector timeout) before recovery starts.
+    pub detect_secs: f64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            enabled: false,
+            seed: 0xFA17,
+            crash_rate: 0.0,
+            straggler_rate: 0.0,
+            slowdown_factor: 4.0,
+            straggler_steps: 8,
+            link_degrade_rate: 0.0,
+            link_degrade_factor: 4.0,
+            link_degrade_steps: 8,
+            detect_secs: 1.0,
+        }
+    }
 }
 
 /// Evaluation-path knobs (`eval::pipeline`), symmetric with the train
@@ -291,6 +352,7 @@ pub struct ExperimentConfig {
     pub partition: PartitionConfig,
     pub network: NetworkConfig,
     pub runtime: RuntimeConfig,
+    pub faults: FaultsConfig,
 }
 
 impl ExperimentConfig {
@@ -334,6 +396,9 @@ impl ExperimentConfig {
                 eval_every: 0,
                 host_threads: 0,
                 prefetch_depth: 2,
+                checkpoint_every_epochs: 0,
+                checkpoint_dir: String::new(),
+                checkpoint_keep: 3,
             },
             eval: EvalConfig { host_threads: 0, prefetch_depth: 2 },
             partition: PartitionConfig::default(),
@@ -344,6 +409,7 @@ impl ExperimentConfig {
                 local_bandwidth_gbps: 160.0,
             },
             runtime: RuntimeConfig { artifacts_dir: "artifacts".into(), model_key: "tiny".into() },
+            faults: FaultsConfig::default(),
         }
     }
 
@@ -392,6 +458,15 @@ impl ExperimentConfig {
         set_usize(&doc, "train.eval_every", &mut cfg.train.eval_every);
         set_usize(&doc, "train.host_threads", &mut cfg.train.host_threads);
         set_usize(&doc, "train.prefetch_depth", &mut cfg.train.prefetch_depth);
+        set_usize(
+            &doc,
+            "train.checkpoint_every_epochs",
+            &mut cfg.train.checkpoint_every_epochs,
+        );
+        if let Some(v) = doc.get_str("train.checkpoint_dir") {
+            cfg.train.checkpoint_dir = v.to_string();
+        }
+        set_usize(&doc, "train.checkpoint_keep", &mut cfg.train.checkpoint_keep);
         if let Some(v) = doc.get_str("train.grad_sync") {
             cfg.train.grad_sync = GradSync::from_str(v)?;
         }
@@ -417,6 +492,17 @@ impl ExperimentConfig {
         set_f64(&doc, "network.bandwidth_gbps", &mut cfg.network.bandwidth_gbps);
         set_usize(&doc, "network.trainers_per_node", &mut cfg.network.trainers_per_node);
         set_f64(&doc, "network.local_bandwidth_gbps", &mut cfg.network.local_bandwidth_gbps);
+        // faults
+        set_bool(&doc, "faults.enabled", &mut cfg.faults.enabled);
+        set_u64(&doc, "faults.seed", &mut cfg.faults.seed);
+        set_f64(&doc, "faults.crash_rate", &mut cfg.faults.crash_rate);
+        set_f64(&doc, "faults.straggler_rate", &mut cfg.faults.straggler_rate);
+        set_f64(&doc, "faults.slowdown_factor", &mut cfg.faults.slowdown_factor);
+        set_usize(&doc, "faults.straggler_steps", &mut cfg.faults.straggler_steps);
+        set_f64(&doc, "faults.link_degrade_rate", &mut cfg.faults.link_degrade_rate);
+        set_f64(&doc, "faults.link_degrade_factor", &mut cfg.faults.link_degrade_factor);
+        set_usize(&doc, "faults.link_degrade_steps", &mut cfg.faults.link_degrade_steps);
+        set_f64(&doc, "faults.detect_secs", &mut cfg.faults.detect_secs);
         // runtime
         if let Some(v) = doc.get_str("runtime.artifacts_dir") {
             cfg.runtime.artifacts_dir = v.to_string();
@@ -487,6 +573,44 @@ impl ExperimentConfig {
                 "partition.build_threads = {} is not a plausible host thread count \
                  (use 0 for the sequential path)",
                 self.partition.build_threads
+            );
+        }
+        if self.train.checkpoint_every_epochs > 0 && self.train.checkpoint_dir.is_empty() {
+            bail!(
+                "train.checkpoint_every_epochs = {} needs a train.checkpoint_dir",
+                self.train.checkpoint_every_epochs
+            );
+        }
+        if self.train.checkpoint_keep == 0 {
+            bail!("train.checkpoint_keep must be >= 1 (retention of the newest snapshot)");
+        }
+        for (key, rate) in [
+            ("faults.crash_rate", self.faults.crash_rate),
+            ("faults.straggler_rate", self.faults.straggler_rate),
+            ("faults.link_degrade_rate", self.faults.link_degrade_rate),
+        ] {
+            if !(0.0..=1.0).contains(&rate) {
+                bail!("{key} = {rate} must be a probability in [0, 1]");
+            }
+        }
+        for (key, factor) in [
+            ("faults.slowdown_factor", self.faults.slowdown_factor),
+            ("faults.link_degrade_factor", self.faults.link_degrade_factor),
+        ] {
+            if factor < 1.0 || factor.is_nan() {
+                bail!("{key} = {factor} must be >= 1 (a slowdown, not a speedup)");
+            }
+        }
+        if self.faults.detect_secs < 0.0 || self.faults.detect_secs.is_nan() {
+            bail!("faults.detect_secs = {} must be >= 0", self.faults.detect_secs);
+        }
+        if self.faults.enabled
+            && self.faults.crash_rate > 0.0
+            && self.train.checkpoint_every_epochs == 0
+        {
+            bail!(
+                "faults.crash_rate > 0 needs checkpointing to recover from: set \
+                 train.checkpoint_every_epochs > 0 (and train.checkpoint_dir)"
             );
         }
         Ok(())
@@ -658,6 +782,69 @@ num_partitions = 4
             .unwrap_err()
             .to_string();
         assert!(err.contains("build_threads"), "got: {err}");
+    }
+
+    #[test]
+    fn checkpoint_keys_parse_and_validate() {
+        let toml = "[train]\ncheckpoint_every_epochs = 2\n\
+                    checkpoint_dir = \"artifacts/ckpt\"\ncheckpoint_keep = 5\n";
+        let cfg = ExperimentConfig::from_toml_str(toml).unwrap();
+        assert_eq!(cfg.train.checkpoint_every_epochs, 2);
+        assert_eq!(cfg.train.checkpoint_dir, "artifacts/ckpt");
+        assert_eq!(cfg.train.checkpoint_keep, 5);
+        // Defaults: checkpointing off, keep 3.
+        assert_eq!(ExperimentConfig::tiny().train.checkpoint_every_epochs, 0);
+        assert_eq!(ExperimentConfig::tiny().train.checkpoint_keep, 3);
+        // Cadence without a directory is rejected.
+        let err = ExperimentConfig::from_toml_str("[train]\ncheckpoint_every_epochs = 2\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("checkpoint_dir"), "got: {err}");
+        let err = ExperimentConfig::from_toml_str("[train]\ncheckpoint_keep = 0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("checkpoint_keep"), "got: {err}");
+    }
+
+    #[test]
+    fn faults_keys_parse_and_validate() {
+        let toml = "[train]\ncheckpoint_every_epochs = 1\ncheckpoint_dir = \"d\"\n\
+                    [faults]\nenabled = true\nseed = 99\ncrash_rate = 0.1\n\
+                    straggler_rate = 0.25\nslowdown_factor = 3.0\nstraggler_steps = 4\n\
+                    link_degrade_rate = 0.5\nlink_degrade_factor = 2.0\n\
+                    link_degrade_steps = 6\ndetect_secs = 0.5\n";
+        let cfg = ExperimentConfig::from_toml_str(toml).unwrap();
+        assert!(cfg.faults.enabled);
+        assert_eq!(cfg.faults.seed, 99);
+        assert_eq!(cfg.faults.crash_rate, 0.1);
+        assert_eq!(cfg.faults.straggler_rate, 0.25);
+        assert_eq!(cfg.faults.slowdown_factor, 3.0);
+        assert_eq!(cfg.faults.straggler_steps, 4);
+        assert_eq!(cfg.faults.link_degrade_rate, 0.5);
+        assert_eq!(cfg.faults.link_degrade_factor, 2.0);
+        assert_eq!(cfg.faults.link_degrade_steps, 6);
+        assert_eq!(cfg.faults.detect_secs, 0.5);
+        // Defaults: disabled, rates zero.
+        let tiny = ExperimentConfig::tiny();
+        assert!(!tiny.faults.enabled);
+        assert_eq!(tiny.faults.crash_rate, 0.0);
+        // Out-of-range rate rejected.
+        let err = ExperimentConfig::from_toml_str("[faults]\ncrash_rate = 1.5\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("crash_rate"), "got: {err}");
+        // Sub-unity slowdown rejected.
+        let err = ExperimentConfig::from_toml_str("[faults]\nslowdown_factor = 0.5\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("slowdown_factor"), "got: {err}");
+        // Crashes without checkpointing to recover from are rejected.
+        let err = ExperimentConfig::from_toml_str(
+            "[faults]\nenabled = true\ncrash_rate = 0.1\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("checkpoint_every_epochs"), "got: {err}");
     }
 
     #[test]

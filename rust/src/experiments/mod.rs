@@ -411,6 +411,55 @@ pub fn fig7_table(rows: &[Table3Row], dataset: &str) -> Table {
     t
 }
 
+/// Recovery report: per-epoch fault + checkpoint accounting for a run
+/// with the fault layer / periodic checkpointing active. Quiet epochs
+/// (no crash, no replay, no straggler inflation, no checkpoint write)
+/// are skipped; a totals row closes the table so the overall price of
+/// failures is visible at a glance.
+pub fn recovery_table(history: &RunHistory, label: &str) -> Table {
+    let mut t = Table::new(
+        &format!("Recovery report, {label}"),
+        &[
+            "epoch",
+            "crashes",
+            "replayed steps",
+            "recovery (s)",
+            "straggler (s)",
+            "ckpt write (s)",
+            "virtual (s)",
+        ],
+    );
+    for e in &history.epochs {
+        let quiet = e.fault_recoveries == 0
+            && e.replayed_steps == 0
+            && e.recovery_secs == 0.0
+            && e.straggler_secs == 0.0
+            && e.checkpoint_write_secs == 0.0;
+        if quiet {
+            continue;
+        }
+        t.row(vec![
+            e.epoch.to_string(),
+            e.fault_recoveries.to_string(),
+            e.replayed_steps.to_string(),
+            format!("{:.4}", e.recovery_secs),
+            format!("{:.4}", e.straggler_secs),
+            format!("{:.4}", e.checkpoint_write_secs),
+            format!("{:.3}", e.virtual_secs),
+        ]);
+    }
+    t.row(vec![
+        "total".to_string(),
+        history.total_recoveries().to_string(),
+        history.total_replayed_steps().to_string(),
+        format!("{:.4}", history.total_recovery_secs()),
+        format!("{:.4}", history.epochs.iter().map(|e| e.straggler_secs).sum::<f64>()),
+        format!("{:.4}", history.total_checkpoint_write_secs()),
+        format!("{:.3}", history.total_virtual_secs()),
+    ]);
+    t
+}
+
 /// Generate the configured dataset (convenience used by CLI + examples).
 pub fn dataset(cfg: &ExperimentConfig) -> KnowledgeGraph {
     generator::generate(&cfg.dataset)
@@ -455,6 +504,36 @@ mod tests {
             assert_eq!(row[9], "off", "tiny config has no cache_dir");
         }
         assert!(stats.iter().all(|s| !s.cache_hit && s.cache_path.is_none()));
+    }
+
+    #[test]
+    fn recovery_table_skips_quiet_epochs_and_totals() {
+        use crate::metrics::EpochRecord;
+        let mut h = RunHistory::default();
+        // Quiet epoch: dropped from the per-epoch rows.
+        h.epochs.push(EpochRecord { epoch: 0, virtual_secs: 1.0, ..Default::default() });
+        h.epochs.push(EpochRecord {
+            epoch: 1,
+            virtual_secs: 3.0,
+            fault_recoveries: 1,
+            replayed_steps: 7,
+            recovery_secs: 0.5,
+            straggler_secs: 0.25,
+            checkpoint_write_secs: 0.125,
+            ..Default::default()
+        });
+        let t = recovery_table(&h, "tiny P=2");
+        // One eventful epoch + the totals row.
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "1");
+        assert_eq!(t.rows[0][1], "1");
+        assert_eq!(t.rows[0][2], "7");
+        assert_eq!(t.rows[1][0], "total");
+        assert_eq!(t.rows[1][1], "1");
+        assert_eq!(t.rows[1][2], "7");
+        let md = t.to_markdown();
+        assert!(md.contains("crashes"), "markdown header missing: {md}");
+        assert!(md.contains("Recovery report"));
     }
 
     #[test]

@@ -141,7 +141,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.train.num_trainers = args.get_usize("trainers", cfg.train.num_trainers)?;
     let epochs = args.get_usize("epochs", cfg.train.epochs)?;
     let eval_every = args.get_usize("eval-every", cfg.train.eval_every)?;
+    if let Some(d) = args.get("checkpoint-dir") {
+        cfg.train.checkpoint_dir = d.to_string();
+    }
+    cfg.train.checkpoint_every_epochs =
+        args.get_usize("checkpoint-every", cfg.train.checkpoint_every_epochs)?;
+    let resume = args.get("resume").map(String::from);
     let dir = artifacts_dir(args, &cfg);
+    cfg.validate()?;
     args.finish()?;
 
     let g = experiments::dataset(&cfg);
@@ -150,13 +157,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let filter = eval::FilterIndex::build(&g)?;
     let mut evaluator = eval::Evaluator::new(&manifest, &g, &cfg.eval)?;
     let mut trainer = Trainer::new(cfg.clone(), &g, &runtime, manifest.clone())?;
+    let start = match &resume {
+        Some(d) => trainer.resume_from_dir(Path::new(d))? as usize,
+        None => 0,
+    };
     log_info!(
-        "training {}: P={} epochs={epochs} core edges per worker {:?}",
+        "training {}: P={} epochs={start}..{epochs} core edges per worker {:?}",
         cfg.name,
         trainer.num_workers(),
         trainer.worker_core_edges()
     );
-    for e in 0..epochs {
+    for e in start..epochs {
         let rec = trainer.train_epoch()?;
         println!(
             "epoch {e:>3}: loss={:.4} virtual={:.3}s wall={:.3}s (cg {:.4}s, model {:.4}s, sync {:.4}s per batch)",
@@ -167,6 +178,12 @@ fn cmd_train(args: &Args) -> Result<()> {
             rec.avg_gnn_model,
             rec.avg_sync_step
         );
+        if rec.fault_recoveries > 0 {
+            println!(
+                "  recovered {} crash(es): replayed {} steps, {:.3} virtual secs charged",
+                rec.fault_recoveries, rec.replayed_steps, rec.recovery_secs
+            );
+        }
         if eval_every > 0 && (e + 1) % eval_every == 0 {
             let (m, stats) =
                 evaluator.evaluate(&runtime, &manifest, &trainer.params, &filter, &g.valid)?;
@@ -190,6 +207,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         "TEST: MRR={:.4} Hits@1={:.4} Hits@3={:.4} Hits@10={:.4} ({} queries, {} chunks, eval {:.3}s)",
         m.mrr, m.hits1, m.hits3, m.hits10, m.num_queries, stats.num_chunks, stats.wall_secs
     );
+    if cfg.faults.enabled || cfg.train.checkpoint_every_epochs > 0 {
+        let label = format!("{} P={}", cfg.name, trainer.num_workers());
+        println!("{}", experiments::recovery_table(&trainer.history, &label).to_markdown());
+    }
     Ok(())
 }
 

@@ -32,7 +32,7 @@ impl ComponentTimes {
 }
 
 /// One epoch of one training run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct EpochRecord {
     pub epoch: usize,
     /// Mean BCE loss over the epoch's triples.
@@ -76,6 +76,21 @@ pub struct EpochRecord {
     /// `(rank_busy - stall) / rank_busy` clamped to [0, 1]; 0.0 on the
     /// sequential path and when no eval ran.
     pub eval_overlap_efficiency: f64,
+    /// Crash-recovery events this epoch (worker restored from the last
+    /// checkpoint after a `train::faults` crash). 0 with faults off.
+    pub fault_recoveries: usize,
+    /// Synchronous steps deterministically re-executed during recovery
+    /// (from the restored checkpoint boundary up to the crash step).
+    pub replayed_steps: usize,
+    /// Virtual seconds charged for recovery: failure detection +
+    /// checkpoint read + state transfer + deterministic replay.
+    pub recovery_secs: f64,
+    /// Extra virtual compute seconds injected by straggler windows (sum
+    /// over workers of inflated minus raw step compute).
+    pub straggler_secs: f64,
+    /// Wall seconds spent writing the periodic checkpoint(s) at this
+    /// epoch's boundary (also charged to the virtual clock).
+    pub checkpoint_write_secs: f64,
 }
 
 /// Timing breakdown of one evaluation pass (wall seconds).
@@ -136,6 +151,26 @@ impl RunHistory {
     pub fn best_eval_mrr(&self) -> f64 {
         self.eval_points.iter().map(|&(_, _, m)| m).fold(0.0, f64::max)
     }
+
+    /// Crash-recovery events across the run (0 with faults off).
+    pub fn total_recoveries(&self) -> usize {
+        self.epochs.iter().map(|e| e.fault_recoveries).sum()
+    }
+
+    /// Steps deterministically re-executed by recoveries across the run.
+    pub fn total_replayed_steps(&self) -> usize {
+        self.epochs.iter().map(|e| e.replayed_steps).sum()
+    }
+
+    /// Virtual seconds spent in recovery across the run.
+    pub fn total_recovery_secs(&self) -> f64 {
+        self.epochs.iter().map(|e| e.recovery_secs).sum()
+    }
+
+    /// Wall seconds spent writing checkpoints across the run.
+    pub fn total_checkpoint_write_secs(&self) -> f64 {
+        self.epochs.iter().map(|e| e.checkpoint_write_secs).sum()
+    }
 }
 
 #[cfg(test)]
@@ -163,6 +198,11 @@ mod tests {
                 eval_wall_secs: 0.0,
                 eval_rank_stall_secs: 0.0,
                 eval_overlap_efficiency: 0.0,
+                fault_recoveries: 1,
+                replayed_steps: 5,
+                recovery_secs: 0.5,
+                straggler_secs: 0.125,
+                checkpoint_write_secs: 0.25,
             });
         }
         h.eval_points.push((2.0, 0, 0.1));
@@ -173,6 +213,10 @@ mod tests {
         assert!((h.final_loss() - 1.0 / 3.0).abs() < 1e-12);
         assert!((h.best_eval_mrr() - 0.3).abs() < 1e-12);
         assert!((h.total_wall_secs() - 12.0).abs() < 1e-12);
+        assert_eq!(h.total_recoveries(), 3);
+        assert_eq!(h.total_replayed_steps(), 15);
+        assert!((h.total_recovery_secs() - 1.5).abs() < 1e-12);
+        assert!((h.total_checkpoint_write_secs() - 0.75).abs() < 1e-12);
     }
 
     #[test]

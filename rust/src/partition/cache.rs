@@ -30,41 +30,13 @@
 use super::{EdgeAssignment, Partition, VertexRole};
 use crate::config::PartitionConfig;
 use crate::graph::{KnowledgeGraph, Triple};
+use crate::util::hash::Fnv64;
 use anyhow::{ensure, Context, Result};
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 4] = b"KGPC";
 const VERSION: u32 = 1;
-
-/// Streaming FNV-1a (64-bit) — stable across platforms and runs, unlike
-/// `DefaultHasher`, whose algorithm is explicitly unspecified.
-struct Fnv64(u64);
-
-impl Fnv64 {
-    fn new() -> Fnv64 {
-        Fnv64(0xcbf2_9ce4_8422_2325)
-    }
-
-    fn write(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
-        }
-    }
-
-    fn write_u32(&mut self, v: u32) {
-        self.write(&v.to_le_bytes());
-    }
-
-    fn write_u64(&mut self, v: u64) {
-        self.write(&v.to_le_bytes());
-    }
-
-    fn finish(&self) -> u64 {
-        self.0
-    }
-}
 
 /// Content hash identifying one partition build: graph identity
 /// (entity/relation counts + train-edge bytes) + full partition config

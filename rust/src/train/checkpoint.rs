@@ -5,21 +5,35 @@
 //!       | params f32[n] | adam_m f32[n] | adam_v f32[n]
 //!   v2: magic "KGSC" | version u32 | grad_mode u32 | param_count u64
 //!       | adam_t u64 | params f32[n] | adam_m f32[n] | adam_v f32[n]
+//!   v3: magic "KGSC" | version u32 | grad_mode u32 | epoch u64
+//!       | param_count u64 | adam_t u64
+//!       | params f32[n] | adam_m f32[n] | adam_v f32[n]
+//!       | fnv1a64 u64   (checksum over every preceding byte)
 //!
-//! v2 adds the gradient mode so lazy-Adam state is restored under the
+//! v2 added the gradient mode so lazy-Adam state is restored under the
 //! semantics it was produced with: lazy moments are only valid for
 //! rows that were actually touched, so silently resuming a
 //! `sparse_lazy` run as `dense` (or vice versa) would change the
-//! optimizer trajectory without warning. Loading still accepts v1
-//! files, which are tagged `dense` (the only mode that existed then).
+//! optimizer trajectory without warning.
+//!
+//! v3 makes the format crash-consistent. Saves go to `<name>.tmp` in
+//! the target directory and are atomically renamed into place (the same
+//! pattern as `partition::cache`), so a writer killed mid-save leaves a
+//! `.tmp` orphan, never a torn checkpoint. An FNV-1a 64 footer over the
+//! whole payload is verified on load, so bit rot or a partially
+//! synced file is an error instead of silently-wrong optimizer state.
+//! v3 also records the epoch boundary the snapshot was taken at, which
+//! `kgscale train --resume` and in-run crash recovery need. Loading
+//! still accepts v1 (tagged `dense`, epoch 0) and v2 (epoch 0) files.
 
 use crate::config::GradMode;
-use anyhow::{Context, Result};
+use crate::util::hash::Fnv64;
+use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 4] = b"KGSC";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
 pub struct Checkpoint {
     pub params: Vec<f32>,
@@ -28,6 +42,23 @@ pub struct Checkpoint {
     pub adam_t: u64,
     /// Gradient mode the optimizer state was produced under.
     pub grad_mode: GradMode,
+    /// Epoch boundary this snapshot was taken at: the state equals the
+    /// model after `epoch` completed epochs. 0 for v1/v2 files.
+    pub epoch: u64,
+}
+
+/// Writer that mirrors every byte into the running checksum.
+struct HashingWriter<W: Write> {
+    inner: W,
+    hash: Fnv64,
+}
+
+impl<W: Write> HashingWriter<W> {
+    fn put(&mut self, bytes: &[u8]) -> Result<()> {
+        self.inner.write_all(bytes)?;
+        self.hash.write(bytes);
+        Ok(())
+    }
 }
 
 pub fn save(
@@ -37,109 +68,275 @@ pub fn save(
     adam_v: &[f32],
     adam_t: u64,
     grad_mode: GradMode,
+    epoch: u64,
 ) -> Result<()> {
-    anyhow::ensure!(params.len() == adam_m.len() && params.len() == adam_v.len());
-    let file = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
-    let mut w = std::io::BufWriter::new(file);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&grad_mode.as_u32().to_le_bytes())?;
-    w.write_all(&(params.len() as u64).to_le_bytes())?;
-    w.write_all(&adam_t.to_le_bytes())?;
-    for arr in [params, adam_m, adam_v] {
-        for &x in arr {
-            w.write_all(&x.to_le_bytes())?;
+    ensure!(params.len() == adam_m.len() && params.len() == adam_v.len());
+    let tmp = tmp_path(path);
+    {
+        let file = std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+        let mut w = HashingWriter { inner: std::io::BufWriter::new(file), hash: Fnv64::new() };
+        w.put(MAGIC)?;
+        w.put(&VERSION.to_le_bytes())?;
+        w.put(&grad_mode.as_u32().to_le_bytes())?;
+        w.put(&epoch.to_le_bytes())?;
+        w.put(&(params.len() as u64).to_le_bytes())?;
+        w.put(&adam_t.to_le_bytes())?;
+        for arr in [params, adam_m, adam_v] {
+            for &x in arr {
+                w.put(&x.to_le_bytes())?;
+            }
         }
+        let checksum = w.hash.finish();
+        w.inner.write_all(&checksum.to_le_bytes())?;
+        w.inner.flush()?;
     }
-    w.flush()?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
     Ok(())
+}
+
+/// Reader that mirrors every consumed byte into the running checksum.
+struct HashingReader<R: Read> {
+    inner: R,
+    hash: Fnv64,
+}
+
+impl<R: Read> HashingReader<R> {
+    fn get(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.inner.read_exact(buf)?;
+        self.hash.write(buf);
+        Ok(())
+    }
+
+    fn get_u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.get(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn get_u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.get(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
 }
 
 pub fn load(path: &Path) -> Result<Checkpoint> {
     let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
-    let mut r = std::io::BufReader::new(file);
+    let file_len = file.metadata().with_context(|| format!("stat {path:?}"))?.len();
+    let mut r = HashingReader { inner: std::io::BufReader::new(file), hash: Fnv64::new() };
     let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "not a kgscale checkpoint");
-    let mut u32b = [0u8; 4];
-    r.read_exact(&mut u32b)?;
-    let version = u32::from_le_bytes(u32b);
-    anyhow::ensure!(
-        version == 1 || version == VERSION,
+    r.get(&mut magic)?;
+    ensure!(&magic == MAGIC, "not a kgscale checkpoint");
+    let version = r.get_u32()?;
+    ensure!(
+        (1..=VERSION).contains(&version),
         "unsupported checkpoint version {version}"
     );
     let grad_mode = if version >= 2 {
-        r.read_exact(&mut u32b)?;
-        GradMode::from_u32(u32::from_le_bytes(u32b))?
+        GradMode::from_u32(r.get_u32()?)?
     } else {
         GradMode::Dense
     };
-    let mut u64b = [0u8; 8];
-    r.read_exact(&mut u64b)?;
-    let n = u64::from_le_bytes(u64b) as usize;
-    r.read_exact(&mut u64b)?;
-    let adam_t = u64::from_le_bytes(u64b);
-    let mut read_vec = |n: usize| -> Result<Vec<f32>> {
+    let epoch = if version >= 3 { r.get_u64()? } else { 0 };
+    let n64 = r.get_u64()?;
+    let adam_t = r.get_u64()?;
+    // Bound the claimed param count against the actual file size BEFORE
+    // allocating: a corrupt header would otherwise drive `vec![0u8; ..]`
+    // straight into an OOM abort instead of an Err.
+    let header_len: u64 = match version {
+        1 => 24,
+        2 => 28,
+        _ => 36,
+    };
+    let footer_len: u64 = if version >= 3 { 8 } else { 0 };
+    let body_len = n64
+        .checked_mul(12)
+        .with_context(|| format!("implausible param count {n64} (overflow)"))?;
+    let expected = header_len
+        .checked_add(body_len)
+        .and_then(|x| x.checked_add(footer_len))
+        .with_context(|| format!("implausible param count {n64} (overflow)"))?;
+    ensure!(
+        expected == file_len,
+        "checkpoint {path:?} is truncated or corrupt: \
+         header claims {n64} params ({expected} bytes), file holds {file_len}"
+    );
+    let n = n64 as usize;
+    let mut read_vec = |r: &mut HashingReader<_>| -> Result<Vec<f32>> {
         let mut bytes = vec![0u8; n * 4];
-        r.read_exact(&mut bytes)?;
+        r.get(&mut bytes)?;
         Ok(bytes
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     };
-    let params = read_vec(n)?;
-    let adam_m = read_vec(n)?;
-    let adam_v = read_vec(n)?;
-    Ok(Checkpoint { params, adam_m, adam_v, adam_t, grad_mode })
+    let params = read_vec(&mut r)?;
+    let adam_m = read_vec(&mut r)?;
+    let adam_v = read_vec(&mut r)?;
+    if version >= 3 {
+        let computed = r.hash.finish();
+        let mut b = [0u8; 8];
+        r.inner.read_exact(&mut b)?;
+        let stored = u64::from_le_bytes(b);
+        ensure!(
+            computed == stored,
+            "checkpoint {path:?} checksum mismatch \
+             (stored {stored:016x}, computed {computed:016x}): file is corrupt"
+        );
+    }
+    Ok(Checkpoint { params, adam_m, adam_v, adam_t, grad_mode, epoch })
+}
+
+/// Path a `save` writes to before the atomic rename into `path`.
+fn tmp_path(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "ckpt".to_string());
+    path.with_file_name(format!("{name}.tmp"))
+}
+
+/// Canonical file name for the snapshot taken at the `epoch` boundary:
+/// `<dir>/ckpt-000042.ckpt`. Zero-padding keeps lexical order == epoch
+/// order for `ls`-level debugging; `latest` parses the number anyway.
+pub fn epoch_file(dir: &Path, epoch: u64) -> PathBuf {
+    dir.join(format!("ckpt-{epoch:06}.ckpt"))
+}
+
+fn parse_epoch(name: &str) -> Option<u64> {
+    name.strip_prefix("ckpt-")?.strip_suffix(".ckpt")?.parse().ok()
+}
+
+/// Newest checkpoint in `dir` by epoch tag, if any. A missing directory
+/// is `Ok(None)` (nothing saved yet, not an error); `*.tmp` orphans
+/// from a crashed save never match the `ckpt-NNNNNN.ckpt` pattern and
+/// are ignored.
+pub fn latest(dir: &Path) -> Result<Option<(u64, PathBuf)>> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("reading checkpoint dir {dir:?}")),
+    };
+    let mut best: Option<(u64, PathBuf)> = None;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(tag) = parse_epoch(&name.to_string_lossy()) else { continue };
+        let better = match &best {
+            Some((b, _)) => tag > *b,
+            None => true,
+        };
+        if better {
+            best = Some((tag, entry.path()));
+        }
+    }
+    Ok(best)
+}
+
+/// Retention: keep the newest `keep` checkpoints (at least one), delete
+/// the rest, and sweep `*.tmp` orphans left by a crashed save. Called
+/// after every successful save; a missing directory is a no-op.
+pub fn prune(dir: &Path, keep: usize) -> Result<()> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(e).with_context(|| format!("reading checkpoint dir {dir:?}")),
+    };
+    let mut tagged: Vec<(u64, PathBuf)> = Vec::new();
+    for entry in entries {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.ends_with(".tmp") {
+            std::fs::remove_file(&path)
+                .with_context(|| format!("removing tmp orphan {path:?}"))?;
+        } else if let Some(tag) = parse_epoch(&name) {
+            tagged.push((tag, path));
+        }
+    }
+    tagged.sort_by_key(|(tag, _)| std::cmp::Reverse(*tag));
+    for (_, path) in tagged.into_iter().skip(keep.max(1)) {
+        std::fs::remove_file(&path).with_context(|| format!("pruning {path:?}"))?;
+    }
+    Ok(())
+}
+
+/// Resume-compatibility check between a checkpoint's gradient mode and
+/// the mode a run wants to continue under. Lazy-Adam moments are only
+/// valid under lazy semantics, so `sparse_lazy` pairs only with itself;
+/// `dense` and `sparse` share bit-identical optimizer state and are
+/// interchangeable.
+pub fn check_grad_mode(saved: GradMode, running: GradMode) -> Result<()> {
+    let saved_lazy = saved == GradMode::SparseLazy;
+    let running_lazy = running == GradMode::SparseLazy;
+    if saved_lazy != running_lazy {
+        bail!(
+            "checkpoint grad_mode {} is incompatible with configured grad_mode {}: \
+             lazy-Adam state only resumes under sparse_lazy",
+            saved.name(),
+            running.name()
+        );
+    }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("kgscale-ckpt-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample() -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        (
+            vec![1.0f32, -2.5, 3.25],
+            vec![0.1f32, 0.2, 0.3],
+            vec![0.01f32, 0.02, 0.03],
+        )
+    }
+
     #[test]
     fn roundtrip() {
-        let dir = std::env::temp_dir().join(format!("kgscale-ckpt-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("roundtrip");
         let path = dir.join("x.ckpt");
-        let params = vec![1.0f32, -2.5, 3.25];
-        let m = vec![0.1f32, 0.2, 0.3];
-        let v = vec![0.01f32, 0.02, 0.03];
-        save(&path, &params, &m, &v, 42, GradMode::Dense).unwrap();
+        let (params, m, v) = sample();
+        save(&path, &params, &m, &v, 42, GradMode::Dense, 9).unwrap();
         let ck = load(&path).unwrap();
         assert_eq!(ck.params, params);
         assert_eq!(ck.adam_m, m);
         assert_eq!(ck.adam_v, v);
         assert_eq!(ck.adam_t, 42);
         assert_eq!(ck.grad_mode, GradMode::Dense);
+        assert_eq!(ck.epoch, 9);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
     fn lazy_adam_state_roundtrips_with_mode_tag() {
-        let dir =
-            std::env::temp_dir().join(format!("kgscale-ckpt-lazy-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("lazy");
         let path = dir.join("lazy.ckpt");
         // Lazy moments: zero at never-touched rows, nonzero elsewhere.
         let params = vec![0.5f32, 1.5, -0.25, 2.0];
         let m = vec![0.1f32, 0.0, 0.0, -0.2];
         let v = vec![0.01f32, 0.0, 0.0, 0.04];
-        save(&path, &params, &m, &v, 7, GradMode::SparseLazy).unwrap();
+        save(&path, &params, &m, &v, 7, GradMode::SparseLazy, 3).unwrap();
         let ck = load(&path).unwrap();
         assert_eq!(ck.grad_mode, GradMode::SparseLazy);
         assert_eq!(ck.adam_m, m);
         assert_eq!(ck.adam_v, v);
         assert_eq!(ck.adam_t, 7);
+        assert_eq!(ck.epoch, 3);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
     fn v1_checkpoints_still_load_as_dense() {
-        let dir = std::env::temp_dir().join(format!("kgscale-ckpt-v1-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("v1");
         let path = dir.join("v1.ckpt");
-        // Hand-build a v1 file: no grad_mode field after the version.
+        // Hand-build a v1 file: no grad_mode/epoch fields, no footer.
         let mut bytes: Vec<u8> = Vec::new();
         bytes.extend_from_slice(MAGIC);
         bytes.extend_from_slice(&1u32.to_le_bytes());
@@ -153,16 +350,176 @@ mod tests {
         assert_eq!(ck.grad_mode, GradMode::Dense);
         assert_eq!(ck.params, vec![1.0, 2.0]);
         assert_eq!(ck.adam_t, 5);
+        assert_eq!(ck.epoch, 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn v2_checkpoints_still_load_without_footer() {
+        let dir = tmp_dir("v2");
+        let path = dir.join("v2.ckpt");
+        // Hand-build a v2 file: grad_mode after version, no epoch/footer.
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&GradMode::SparseLazy.as_u32().to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // param_count
+        bytes.extend_from_slice(&11u64.to_le_bytes()); // adam_t
+        for x in [1.0f32, 2.0, 0.1, 0.2, 0.01, 0.02] {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.grad_mode, GradMode::SparseLazy);
+        assert_eq!(ck.params, vec![1.0, 2.0]);
+        assert_eq!(ck.adam_t, 11);
+        assert_eq!(ck.epoch, 0);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
     fn rejects_garbage() {
-        let dir = std::env::temp_dir().join(format!("kgscale-ckpt-bad-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("bad");
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load(&path).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn save_is_atomic_and_leaves_no_tmp() {
+        let dir = tmp_dir("atomic");
+        let path = dir.join("a.ckpt");
+        let (params, m, v) = sample();
+        save(&path, &params, &m, &v, 1, GradMode::Dense, 1).unwrap();
+        assert!(path.exists());
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "tmp files left behind: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_file_is_rejected() {
+        let dir = tmp_dir("trunc");
+        let path = dir.join("t.ckpt");
+        let (params, m, v) = sample();
+        save(&path, &params, &m, &v, 1, GradMode::Dense, 1).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated or corrupt"), "got: {err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn flipped_bit_is_caught_by_checksum() {
+        let dir = tmp_dir("flip");
+        let path = dir.join("f.ckpt");
+        let (params, m, v) = sample();
+        save(&path, &params, &m, &v, 1, GradMode::Dense, 1).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one bit in the params body (header is 36 bytes), which
+        // the length check cannot see — only the checksum catches it.
+        bytes[40] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "got: {err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn garbage_param_count_errors_without_oom() {
+        let dir = tmp_dir("oom");
+        let path = dir.join("o.ckpt");
+        // Header claiming u64::MAX params: `n * 12` overflows.
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&GradMode::Dense.as_u32().to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // epoch
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // param_count
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // adam_t
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("implausible"), "got: {err}");
+        // Header claiming a huge-but-not-overflowing count on a tiny
+        // file: bounded by file length, no allocation happens.
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&GradMode::Dense.as_u32().to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // epoch
+        bytes.extend_from_slice(&(1u64 << 40).to_le_bytes()); // param_count
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // adam_t
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated or corrupt"), "got: {err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn latest_ignores_tmp_orphans_and_prune_cleans_them() {
+        let dir = tmp_dir("orphan");
+        let (params, m, v) = sample();
+        save(&epoch_file(&dir, 2), &params, &m, &v, 1, GradMode::Dense, 2).unwrap();
+        save(&epoch_file(&dir, 4), &params, &m, &v, 2, GradMode::Dense, 4).unwrap();
+        // Simulate a save that crashed mid-write.
+        let orphan = dir.join("ckpt-000006.ckpt.tmp");
+        std::fs::write(&orphan, b"partial").unwrap();
+        let (tag, path) = latest(&dir).unwrap().unwrap();
+        assert_eq!(tag, 4);
+        assert_eq!(path, epoch_file(&dir, 4));
+        prune(&dir, 2).unwrap();
+        assert!(!orphan.exists(), "tmp orphan survived prune");
+        assert!(epoch_file(&dir, 2).exists());
+        assert!(epoch_file(&dir, 4).exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prune_keeps_newest_k() {
+        let dir = tmp_dir("prune");
+        let (params, m, v) = sample();
+        for tag in 1..=5u64 {
+            save(&epoch_file(&dir, tag), &params, &m, &v, tag, GradMode::Dense, tag).unwrap();
+        }
+        prune(&dir, 2).unwrap();
+        for tag in 1..=3u64 {
+            assert!(!epoch_file(&dir, tag).exists(), "epoch {tag} should be pruned");
+        }
+        for tag in 4..=5u64 {
+            assert!(epoch_file(&dir, tag).exists(), "epoch {tag} should be kept");
+        }
+        // keep=0 still retains the newest one.
+        prune(&dir, 0).unwrap();
+        assert!(epoch_file(&dir, 5).exists());
+        assert!(!epoch_file(&dir, 4).exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn latest_on_missing_dir_is_none() {
+        let dir = std::env::temp_dir()
+            .join(format!("kgscale-ckpt-missing-{}", std::process::id()));
+        assert!(latest(&dir).unwrap().is_none());
+        prune(&dir, 3).unwrap(); // also a no-op
+    }
+
+    #[test]
+    fn grad_mode_compat_matrix() {
+        use GradMode::*;
+        // dense and sparse share bit-identical optimizer state.
+        check_grad_mode(Dense, Dense).unwrap();
+        check_grad_mode(Dense, Sparse).unwrap();
+        check_grad_mode(Sparse, Dense).unwrap();
+        check_grad_mode(SparseLazy, SparseLazy).unwrap();
+        let err = check_grad_mode(SparseLazy, Dense).unwrap_err().to_string();
+        assert!(err.contains("grad_mode"), "got: {err}");
+        assert!(check_grad_mode(Dense, SparseLazy).is_err());
+        assert!(check_grad_mode(Sparse, SparseLazy).is_err());
     }
 }

@@ -1,0 +1,280 @@
+//! Deterministic fault injection for the simulated cluster.
+//!
+//! The virtual cluster in `train::netsim` models *timing* only — every
+//! run is failure-free. This module layers a seeded fault schedule on
+//! top so the trainer can exercise (and price, on the `VirtualClock`)
+//! the recovery machinery a real multi-machine deployment needs.
+//!
+//! # Event model
+//!
+//! Three event kinds, all expressed against the per-epoch step grid of
+//! `P` workers × `steps` synchronous steps:
+//!
+//! - **Worker crash** (`CrashEvent`): worker `wid` dies at step `step`.
+//!   The synchronous barrier detects the dead replica after the step's
+//!   gradient exchange, restores model + optimizer state from the last
+//!   checkpoint, and deterministically replays the lost steps (the
+//!   per-(epoch, wid) RNG streams make the replay bit-exact). At most
+//!   one crash is scheduled per epoch — the first Bernoulli success in
+//!   step-major (step, wid) order — because recovery resets the epoch
+//!   tail anyway.
+//! - **Straggler window** (`StragglerWindow`): worker `wid`'s measured
+//!   compute time is multiplied by `factor` (≥ 1) for steps in
+//!   `[start, end)`. Under the synchronous barrier the whole cluster
+//!   waits, so one slow replica inflates every step in the window.
+//! - **Link degradation** (`LinkWindow`): the modeled gradient-sync
+//!   time (α/β cost from `NetworkModel`) is multiplied by `factor` for
+//!   steps in `[start, end)` — a transient slow interconnect.
+//!
+//! # Determinism contract
+//!
+//! The schedule for epoch `e` is a pure function of
+//! (`faults.seed`, `e`, `P`, `steps`): a dedicated
+//! `Rng::seeded(seed + e * GOLDEN)` stream, *disjoint from every
+//! training stream* (workers draw from per-(epoch, wid) sampler seeds;
+//! the fault stream never touches them). Draw order is fixed —
+//! stragglers (one Bernoulli + window per worker), then link (one
+//! Bernoulli + window), then the crash scan — so enabling one event
+//! kind never shifts another kind's draws. Re-running a config
+//! reproduces the identical fault sequence, which is what makes the
+//! crash-recovery e2e invariant (recovered trajectory == fault-free
+//! trajectory) testable at all. With `faults.enabled = false` the
+//! trainer never constructs a plan and the hot path multiplies by
+//! nothing — bit-identical to the pre-fault-layer code.
+
+use crate::config::FaultsConfig;
+use crate::util::rng::Rng;
+
+/// Worker `wid` dies at step `step`; detected at that step's barrier.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CrashEvent {
+    pub step: usize,
+    pub wid: usize,
+}
+
+/// Worker `wid` computes `factor`× slower for steps in `[start, end)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StragglerWindow {
+    pub wid: usize,
+    pub start: usize,
+    pub end: usize,
+    pub factor: f64,
+}
+
+/// Gradient-sync cost is `factor`× for steps in `[start, end)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkWindow {
+    pub start: usize,
+    pub end: usize,
+    pub factor: f64,
+}
+
+/// The fault schedule for one epoch, fully materialized up front.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EpochFaults {
+    pub crash: Option<CrashEvent>,
+    pub stragglers: Vec<StragglerWindow>,
+    pub link: Option<LinkWindow>,
+}
+
+impl EpochFaults {
+    /// Multiplier on worker `wid`'s measured compute at `step` (1.0
+    /// when no straggler window covers it).
+    pub fn compute_multiplier(&self, step: usize, wid: usize) -> f64 {
+        for w in &self.stragglers {
+            if w.wid == wid && step >= w.start && step < w.end {
+                return w.factor;
+            }
+        }
+        1.0
+    }
+
+    /// Multiplier on the modeled sync cost at `step`.
+    pub fn sync_multiplier(&self, step: usize) -> f64 {
+        match &self.link {
+            Some(w) if step >= w.start && step < w.end => w.factor,
+            _ => 1.0,
+        }
+    }
+
+    /// The worker that crashes at `step`, if any.
+    pub fn crash_at(&self, step: usize) -> Option<usize> {
+        match &self.crash {
+            Some(c) if c.step == step => Some(c.wid),
+            _ => None,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.crash.is_none() && self.stragglers.is_empty() && self.link.is_none()
+    }
+}
+
+/// Seeded generator of per-epoch fault schedules. Construct once per
+/// run from the `[faults]` config; call [`epoch_events`] each epoch.
+///
+/// [`epoch_events`]: FaultPlan::epoch_events
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    cfg: FaultsConfig,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: &FaultsConfig) -> FaultPlan {
+        FaultPlan { cfg: cfg.clone() }
+    }
+
+    /// The fault schedule for `epoch` on a `workers` × `steps` grid.
+    /// Pure in (seed, epoch, workers, steps) — see the module docs for
+    /// the determinism contract and the fixed draw order.
+    pub fn epoch_events(&self, epoch: usize, workers: usize, steps: usize) -> EpochFaults {
+        let mut out = EpochFaults::default();
+        if workers == 0 || steps == 0 {
+            return out;
+        }
+        let seed = self
+            .cfg
+            .seed
+            .wrapping_add((epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::seeded(seed);
+        // 1. Stragglers: one Bernoulli + window per worker.
+        for wid in 0..workers {
+            if rng.next_f64() < self.cfg.straggler_rate {
+                let start = rng.below(steps);
+                let end = (start + self.cfg.straggler_steps.max(1)).min(steps);
+                out.stragglers.push(StragglerWindow {
+                    wid,
+                    start,
+                    end,
+                    factor: self.cfg.slowdown_factor,
+                });
+            }
+        }
+        // 2. Link degradation: one Bernoulli + window per epoch.
+        if rng.next_f64() < self.cfg.link_degrade_rate {
+            let start = rng.below(steps);
+            let end = (start + self.cfg.link_degrade_steps.max(1)).min(steps);
+            out.link = Some(LinkWindow { start, end, factor: self.cfg.link_degrade_factor });
+        }
+        // 3. Crash: first Bernoulli success in step-major (step, wid)
+        //    order. Last in draw order so the early break below cannot
+        //    shift the straggler/link draws above.
+        'scan: for step in 0..steps {
+            for wid in 0..workers {
+                if rng.next_f64() < self.cfg.crash_rate {
+                    out.crash = Some(CrashEvent { step, wid });
+                    break 'scan;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> FaultsConfig {
+        FaultsConfig {
+            enabled: true,
+            seed: 0xFA17,
+            crash_rate: 0.0,
+            straggler_rate: 0.0,
+            slowdown_factor: 4.0,
+            straggler_steps: 8,
+            link_degrade_rate: 0.0,
+            link_degrade_factor: 4.0,
+            link_degrade_steps: 8,
+            detect_secs: 1.0,
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_in_seed_and_epoch() {
+        let mut c = cfg();
+        c.crash_rate = 0.05;
+        c.straggler_rate = 0.5;
+        c.link_degrade_rate = 0.5;
+        let plan = FaultPlan::new(&c);
+        for epoch in 0..8 {
+            assert_eq!(plan.epoch_events(epoch, 4, 32), plan.epoch_events(epoch, 4, 32));
+        }
+        // Different epoch => (almost surely) different schedule stream.
+        let a: Vec<_> = (0..32).map(|e| plan.epoch_events(e, 4, 32)).collect();
+        assert!(a.windows(2).any(|w| w[0] != w[1]), "all epochs drew identical schedules");
+    }
+
+    #[test]
+    fn zero_rates_produce_empty_schedule() {
+        let plan = FaultPlan::new(&cfg());
+        for epoch in 0..16 {
+            assert!(plan.epoch_events(epoch, 8, 64).is_empty());
+        }
+        // Degenerate grids are empty too.
+        let mut c = cfg();
+        c.crash_rate = 1.0;
+        let plan = FaultPlan::new(&c);
+        assert!(plan.epoch_events(0, 0, 64).is_empty());
+        assert!(plan.epoch_events(0, 8, 0).is_empty());
+    }
+
+    #[test]
+    fn certain_crash_hits_first_grid_cell() {
+        let mut c = cfg();
+        c.crash_rate = 1.0;
+        let plan = FaultPlan::new(&c);
+        let ev = plan.epoch_events(3, 4, 32);
+        assert_eq!(ev.crash, Some(CrashEvent { step: 0, wid: 0 }));
+        assert_eq!(ev.crash_at(0), Some(0));
+        assert_eq!(ev.crash_at(1), None);
+    }
+
+    #[test]
+    fn crash_step_varies_across_epochs() {
+        let mut c = cfg();
+        c.crash_rate = 0.05;
+        let plan = FaultPlan::new(&c);
+        let steps: std::collections::BTreeSet<usize> = (0..100)
+            .filter_map(|e| plan.epoch_events(e, 4, 32).crash.map(|cr| cr.step))
+            .collect();
+        assert!(steps.len() >= 2, "crash step never varied: {steps:?}");
+    }
+
+    #[test]
+    fn straggler_window_bounds_and_multiplier() {
+        let mut c = cfg();
+        c.straggler_rate = 1.0;
+        c.slowdown_factor = 3.0;
+        c.straggler_steps = 4;
+        let plan = FaultPlan::new(&c);
+        let ev = plan.epoch_events(0, 3, 16);
+        assert_eq!(ev.stragglers.len(), 3, "every worker straggles at rate 1.0");
+        for w in &ev.stragglers {
+            assert!(w.start < w.end && w.end <= 16);
+            assert!(w.end - w.start <= 4);
+            assert_eq!(ev.compute_multiplier(w.start, w.wid), 3.0);
+            if w.end < 16 {
+                assert_eq!(ev.compute_multiplier(w.end, w.wid), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn link_window_scales_sync_only_inside() {
+        let mut c = cfg();
+        c.link_degrade_rate = 1.0;
+        c.link_degrade_factor = 2.5;
+        c.link_degrade_steps = 4;
+        let plan = FaultPlan::new(&c);
+        let ev = plan.epoch_events(1, 2, 16);
+        let w = ev.link.clone().expect("rate 1.0 must schedule a window");
+        assert_eq!(ev.sync_multiplier(w.start), 2.5);
+        if w.end < 16 {
+            assert_eq!(ev.sync_multiplier(w.end), 1.0);
+        }
+        if w.start > 0 {
+            assert_eq!(ev.sync_multiplier(w.start - 1), 1.0);
+        }
+    }
+}

@@ -7,11 +7,14 @@
 //! and for bandwidth benches; [`plan`] sizes the AOT buckets; [`sparse`]
 //! is the row-sparse gradient representation behind the `sparse` /
 //! `sparse_lazy` gradient modes; [`pipeline`] is the multi-threaded host
-//! data path that overlaps batch prep with XLA execution; and
+//! data path that overlaps batch prep with XLA execution; [`faults`]
+//! injects seeded crash/straggler/link events that [`trainer`] (and the
+//! crash-consistent [`checkpoint`] format) recovers from; and
 //! [`trainer`] is Algorithm 1.
 
 pub mod allreduce;
 pub mod checkpoint;
+pub mod faults;
 pub mod netsim;
 pub mod optimizer;
 pub mod pipeline;
@@ -19,6 +22,7 @@ pub mod plan;
 pub mod sparse;
 pub mod trainer;
 
+pub use faults::{EpochFaults, FaultPlan};
 pub use netsim::{NetworkModel, VirtualClock};
 pub use optimizer::Adam;
 pub use pipeline::{worker_epoch_seed, HostPool};

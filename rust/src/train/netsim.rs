@@ -106,6 +106,21 @@ impl NetworkModel {
             crate::config::GradSync::None => 0.0,
         }
     }
+
+    /// [`sync_secs`](NetworkModel::sync_secs) under transient link
+    /// degradation (`train::faults`): the whole α/β cost is inflated by
+    /// `factor` for the affected step. `factor = 1.0` is exact (×1.0 is
+    /// bitwise identity for finite f64), so an empty fault window costs
+    /// nothing in precision.
+    pub fn sync_secs_degraded(
+        &self,
+        algo: crate::config::GradSync,
+        bytes: usize,
+        p: usize,
+        factor: f64,
+    ) -> f64 {
+        self.sync_secs(algo, bytes, p) * factor
+    }
 }
 
 /// Virtual cluster clock: composes measured per-worker compute with
@@ -219,6 +234,20 @@ mod tests {
             m.sparse_allgather_secs(sparse_bytes, p) < m.ring_allreduce_secs(sparse_bytes, p)
         );
         assert_eq!(m.sparse_allgather_secs(sparse_bytes, 1), 0.0);
+    }
+
+    #[test]
+    fn degraded_sync_scales_and_factor_one_is_identity() {
+        let m = model();
+        let base = m.sync_secs(GradSync::Ring, 1 << 20, 8);
+        let slow = m.sync_secs_degraded(GradSync::Ring, 1 << 20, 8, 2.0);
+        assert_eq!(slow, base * 2.0);
+        // factor 1.0 must be bitwise identical — the fault layer leans
+        // on this for the disabled ⇒ bit-identical invariant.
+        assert_eq!(
+            m.sync_secs_degraded(GradSync::Ring, 1 << 20, 8, 1.0).to_bits(),
+            base.to_bits()
+        );
     }
 
     #[test]

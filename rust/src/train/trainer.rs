@@ -74,6 +74,7 @@ use crate::sampler::compute_graph::ComputeGraphBuilder;
 use crate::sampler::negative::{NegativeSampler, Scope};
 use crate::sampler::PartContext;
 use crate::train::checkpoint;
+use crate::train::faults::{EpochFaults, FaultPlan};
 use crate::train::netsim::{NetworkModel, VirtualClock};
 use crate::train::optimizer::Adam;
 use crate::train::pipeline::{
@@ -82,9 +83,9 @@ use crate::train::pipeline::{
 use crate::train::sparse::SparseGrad;
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::collections::VecDeque;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::time::Duration;
@@ -129,6 +130,31 @@ struct EpochStats {
     stall_secs: f64,
     /// Total seconds prep jobs kept pool threads busy.
     prep_busy_secs: f64,
+    /// Crash-recovery events this epoch (`train::faults`).
+    crashes: usize,
+    /// Steps deterministically re-executed by those recoveries.
+    replayed_steps: usize,
+    /// Virtual seconds charged for detection + restore + replay.
+    recovery_secs: f64,
+    /// Extra virtual compute injected by straggler windows.
+    straggler_secs: f64,
+}
+
+/// Periodic-checkpoint bookkeeping: where snapshots go, how often, and
+/// how much work a crash would have to replay from the newest one.
+struct CkptState {
+    dir: PathBuf,
+    /// Snapshot cadence in epochs (`train.checkpoint_every_epochs` > 0).
+    every: usize,
+    /// Retention (`train.checkpoint_keep`).
+    keep: usize,
+    /// Epoch tag of the newest on-disk snapshot, once one exists.
+    last_epoch: Option<u64>,
+    /// Virtual seconds of completed epochs since that snapshot (what a
+    /// recovery would replay, beyond the crashed epoch's own progress).
+    virtual_since: f64,
+    /// Synchronous steps of completed epochs since that snapshot.
+    steps_since: usize,
 }
 
 pub struct Trainer<'rt> {
@@ -151,6 +177,11 @@ pub struct Trainer<'rt> {
     shared: Arc<PrepShared>,
     /// Host prep pool; `None` ⇒ sequential reference path.
     pool: Option<HostPool>,
+    /// Seeded fault schedule; `None` ⇔ `faults.enabled = false`, which
+    /// keeps every step on the exact pre-fault-layer code path.
+    faults: Option<FaultPlan>,
+    /// Periodic-checkpoint state; `None` ⇔ checkpointing off.
+    ckpt: Option<CkptState>,
     pub history: RunHistory,
     epoch_counter: usize,
 }
@@ -233,6 +264,15 @@ impl<'rt> Trainer<'rt> {
                 runtime.load(file)?;
             }
         }
+        let faults = cfg.faults.enabled.then(|| FaultPlan::new(&cfg.faults));
+        let ckpt = (cfg.train.checkpoint_every_epochs > 0).then(|| CkptState {
+            dir: PathBuf::from(&cfg.train.checkpoint_dir),
+            every: cfg.train.checkpoint_every_epochs,
+            keep: cfg.train.checkpoint_keep,
+            last_epoch: None,
+            virtual_since: 0.0,
+            steps_since: 0,
+        });
         Ok(Trainer {
             cfg,
             manifest,
@@ -246,6 +286,8 @@ impl<'rt> Trainer<'rt> {
             grad_scratch,
             shared,
             pool,
+            faults,
+            ckpt,
             history: RunHistory::default(),
             epoch_counter: 0,
         })
@@ -314,6 +356,12 @@ impl<'rt> Trainer<'rt> {
         let wall = Stopwatch::new();
         let mut clk = VirtualClock::new();
         let mut components = ComponentTimes::new();
+        let mut ckpt_write_secs = 0.0;
+        // With checkpointing on, snapshot the pre-training state before
+        // the first epoch runs so a crash in it has something to restore.
+        if self.ckpt.as_ref().is_some_and(|c| c.last_epoch.is_none()) {
+            ckpt_write_secs += self.write_checkpoint_tag(epoch as u64)?;
+        }
 
         let (plans, total_remote) = self.plan_epoch(epoch)?;
         // Remote fetches (global-negative ablation) are charged to the
@@ -324,12 +372,48 @@ impl<'rt> Trainer<'rt> {
         }
 
         let steps = plans.iter().map(|b| b.num_batches()).max().unwrap_or(0);
+        // Materialize this epoch's fault schedule up front (owned, so the
+        // step loops can borrow `self` mutably). `None` with faults off.
+        let faults = self
+            .faults
+            .as_ref()
+            .map(|p| p.epoch_events(epoch, self.workers.len(), steps));
         let mut stats = EpochStats::default();
         if self.pool.is_some() {
-            self.steps_pipelined(epoch, &plans, steps, &mut clk, &mut components, &mut stats)?;
+            self.steps_pipelined(
+                epoch,
+                &plans,
+                steps,
+                faults.as_ref(),
+                &mut clk,
+                &mut components,
+                &mut stats,
+            )?;
         } else {
-            self.steps_sequential(epoch, &plans, steps, &mut clk, &mut components, &mut stats)?;
+            self.steps_sequential(
+                epoch,
+                &plans,
+                steps,
+                faults.as_ref(),
+                &mut clk,
+                &mut components,
+                &mut stats,
+            )?;
         }
+
+        // Account this epoch toward what a future crash would replay,
+        // then snapshot at the configured epoch-boundary cadence (which
+        // resets that account).
+        if let Some(ck) = &mut self.ckpt {
+            ck.virtual_since += clk.now();
+            ck.steps_since += steps;
+        }
+        if self.ckpt.as_ref().is_some_and(|c| (epoch + 1) % c.every == 0) {
+            ckpt_write_secs += self.write_checkpoint_tag(epoch as u64 + 1)?;
+        }
+        // Checkpoint writes are coordinator-serial work on the virtual
+        // cluster too.
+        clk.advance(ckpt_write_secs);
 
         // Overlap efficiency: the share of host prep work hidden behind
         // coordinator execution. 0.0 on the sequential path (no
@@ -360,6 +444,11 @@ impl<'rt> Trainer<'rt> {
             eval_wall_secs: 0.0,
             eval_rank_stall_secs: 0.0,
             eval_overlap_efficiency: 0.0,
+            fault_recoveries: stats.crashes,
+            replayed_steps: stats.replayed_steps,
+            recovery_secs: stats.recovery_secs,
+            straggler_secs: stats.straggler_secs,
+            checkpoint_write_secs: ckpt_write_secs,
         };
         self.history.epochs.push(record.clone());
         Ok(record)
@@ -367,11 +456,13 @@ impl<'rt> Trainer<'rt> {
 
     /// Sequential reference path: prepare and execute each worker's
     /// batch inline, in `wid` order.
+    #[allow(clippy::too_many_arguments)]
     fn steps_sequential(
         &mut self,
         epoch: usize,
         plans: &[Arc<EpochBatches>],
         steps: usize,
+        faults: Option<&EpochFaults>,
         clk: &mut VirtualClock,
         components: &mut ComponentTimes,
         stats: &mut EpochStats,
@@ -400,12 +491,31 @@ impl<'rt> Trainer<'rt> {
                 step_count += count;
                 components.get_compute_graph.push(cg_secs);
                 components.gnn_model.push(exec_secs);
-                step_compute.push(cg_secs + exec_secs);
+                // Straggler windows inflate this worker's virtual
+                // compute; component means keep the raw measurement.
+                let mut compute = cg_secs + exec_secs;
+                if let Some(f) = faults {
+                    let m = f.compute_multiplier(step, wid);
+                    if m > 1.0 {
+                        stats.straggler_secs += compute * (m - 1.0);
+                        compute *= m;
+                    }
+                }
+                step_compute.push(compute);
             }
             components.prefetch_stall.push(0.0);
             stats.loss_sum += step_loss;
             stats.count_sum += step_count;
-            self.sync_and_step(&step_compute, step_count, clk, components, stats);
+            self.sync_and_step(
+                epoch,
+                step,
+                faults,
+                &step_compute,
+                step_count,
+                clk,
+                components,
+                stats,
+            )?;
         }
         Ok(())
     }
@@ -416,11 +526,13 @@ impl<'rt> Trainer<'rt> {
     /// `PrepState` is owned by one job at a time, serializing its
     /// steps), and the coordinator consumes them in fixed `wid` order —
     /// so accumulation order matches the sequential path exactly.
+    #[allow(clippy::too_many_arguments)]
     fn steps_pipelined(
         &mut self,
         epoch: usize,
         plans: &[Arc<EpochBatches>],
         steps: usize,
+        faults: Option<&EpochFaults>,
         clk: &mut VirtualClock,
         components: &mut ComponentTimes,
         stats: &mut EpochStats,
@@ -437,6 +549,7 @@ impl<'rt> Trainer<'rt> {
             epoch,
             plans,
             steps,
+            faults,
             clk,
             components,
             stats,
@@ -467,6 +580,7 @@ impl<'rt> Trainer<'rt> {
         epoch: usize,
         plans: &[Arc<EpochBatches>],
         steps: usize,
+        faults: Option<&EpochFaults>,
         clk: &mut VirtualClock,
         components: &mut ComponentTimes,
         stats: &mut EpochStats,
@@ -518,13 +632,32 @@ impl<'rt> Trainer<'rt> {
                 step_count += count;
                 components.get_compute_graph.push(cg_secs);
                 components.gnn_model.push(exec_secs);
-                step_compute.push(cg_secs + exec_secs);
+                // Straggler windows inflate this worker's virtual
+                // compute; component means keep the raw measurement.
+                let mut compute = cg_secs + exec_secs;
+                if let Some(f) = faults {
+                    let m = f.compute_multiplier(step, wid);
+                    if m > 1.0 {
+                        stats.straggler_secs += compute * (m - 1.0);
+                        compute *= m;
+                    }
+                }
+                step_compute.push(compute);
             }
             components.prefetch_stall.push(step_stall);
             stats.stall_secs += step_stall;
             stats.loss_sum += step_loss;
             stats.count_sum += step_count;
-            self.sync_and_step(&step_compute, step_count, clk, components, stats);
+            self.sync_and_step(
+                epoch,
+                step,
+                faults,
+                &step_compute,
+                step_count,
+                clk,
+                components,
+                stats,
+            )?;
         }
         Ok(())
     }
@@ -615,15 +748,22 @@ impl<'rt> Trainer<'rt> {
     /// Gradient averaging: modeled sync + measured optimizer step, then
     /// advance the virtual clock. Sparse sync is charged on the bytes
     /// that actually move — the union touched entity/relation rows +
-    /// dense remainder — instead of the full `param_count * 4`.
+    /// dense remainder — instead of the full `param_count * 4`. With a
+    /// fault schedule, the sync cost is inflated inside link-degradation
+    /// windows and a scheduled crash at this step triggers recovery at
+    /// the barrier.
+    #[allow(clippy::too_many_arguments)]
     fn sync_and_step(
         &mut self,
+        epoch: usize,
+        step: usize,
+        faults: Option<&EpochFaults>,
         step_compute: &[f64],
         step_count: f64,
         clk: &mut VirtualClock,
         components: &mut ComponentTimes,
         stats: &mut EpochStats,
-    ) {
+    ) -> Result<()> {
         let p = self.workers.len();
         let (sync_bytes, touched) = match &self.sparse_accum {
             Some(sg) if self.cfg.train.grad_sync == GradSync::Sparse => {
@@ -634,7 +774,15 @@ impl<'rt> Trainer<'rt> {
         };
         stats.touched_sum += touched as f64;
         stats.sync_bytes_sum += sync_bytes as f64;
-        let sync_model_secs = self.net.sync_secs(self.cfg.train.grad_sync, sync_bytes, p);
+        let sync_model_secs = match faults {
+            Some(f) => self.net.sync_secs_degraded(
+                self.cfg.train.grad_sync,
+                sync_bytes,
+                p,
+                f.sync_multiplier(step),
+            ),
+            None => self.net.sync_secs(self.cfg.train.grad_sync, sync_bytes, p),
+        };
         let opt_sw = Stopwatch::new();
         if step_count > 0.0 {
             let inv = (1.0 / step_count) as f32;
@@ -665,6 +813,130 @@ impl<'rt> Trainer<'rt> {
         let opt_secs = opt_sw.elapsed_secs();
         components.sync_step.push(sync_model_secs + opt_secs);
         clk.step(step_compute, sync_model_secs + opt_secs);
+        // A scheduled crash surfaces at this step's barrier: the missing
+        // replica is detected and recovery runs before the next step.
+        if let Some(wid) = faults.and_then(|f| f.crash_at(step)) {
+            self.recover_from_crash(epoch, step, wid, clk, stats)?;
+        }
+        Ok(())
+    }
+
+    /// Crash recovery at the synchronous barrier. The dead worker `wid`
+    /// is replaced: the last checkpoint is read back in full (which
+    /// also exercises the checksum path), shipped over the modeled
+    /// interconnect, and the steps since that snapshot are replayed.
+    /// The live replica is *not* overwritten — training is
+    /// deterministic in (seed, epoch, wid), so replaying from the
+    /// snapshot reconstructs exactly the state the survivors already
+    /// hold; only the cost of detection + restore + transfer + replay
+    /// is charged to the virtual clock. This is what makes the
+    /// recovered-run-matches-fault-free-run invariant hold bit-for-bit.
+    fn recover_from_crash(
+        &mut self,
+        epoch: usize,
+        step: usize,
+        wid: usize,
+        clk: &mut VirtualClock,
+        stats: &mut EpochStats,
+    ) -> Result<()> {
+        let (dir, last, virtual_since, steps_since) = match &self.ckpt {
+            Some(ck) => (ck.dir.clone(), ck.last_epoch, ck.virtual_since, ck.steps_since),
+            None => anyhow::bail!(
+                "worker {wid} crashed at epoch {epoch} step {step} but checkpointing \
+                 is disabled (train.checkpoint_every_epochs = 0)"
+            ),
+        };
+        let tag = last.with_context(|| {
+            format!("worker {wid} crashed before the first checkpoint was written")
+        })?;
+        let path = checkpoint::epoch_file(&dir, tag);
+        let read_sw = Stopwatch::new();
+        let restored = checkpoint::load(&path)
+            .with_context(|| format!("restoring after crash of worker {wid}"))?;
+        let read_secs = read_sw.elapsed_secs();
+        anyhow::ensure!(
+            restored.params.len() == self.manifest.param_count,
+            "checkpoint {path:?} has {} params but manifest expects {}",
+            restored.params.len(),
+            self.manifest.param_count
+        );
+        // Restored state ships to the replacement replica over the
+        // cross-node link: v3 header+footer (44 bytes) + 3 f32 arrays.
+        let transfer_bytes = 44 + restored.params.len() * 12;
+        let transfer_secs = self.net.fetch_secs(transfer_bytes);
+        // Deterministic replay re-executes everything since the
+        // snapshot: the completed epochs' virtual time plus this
+        // epoch's progress up to and including the crash step.
+        let replay_secs = virtual_since + clk.now();
+        let replayed_steps = steps_since + step + 1;
+        let recovery_secs =
+            self.cfg.faults.detect_secs + read_secs + transfer_secs + replay_secs;
+        clk.advance(recovery_secs);
+        stats.crashes += 1;
+        stats.replayed_steps += replayed_steps;
+        stats.recovery_secs += recovery_secs;
+        crate::log_info!(
+            "worker {wid} crashed at epoch {epoch} step {step}: restored ckpt-{tag:06}, \
+             replayed {replayed_steps} steps, charged {recovery_secs:.3} virtual secs"
+        );
+        Ok(())
+    }
+
+    /// Write the periodic snapshot tagged `tag` (completed epochs),
+    /// prune to the retention window, and reset the replay account.
+    /// Returns the wall seconds the write took; no-op (0.0) when
+    /// checkpointing is off.
+    fn write_checkpoint_tag(&mut self, tag: u64) -> Result<f64> {
+        let (dir, keep) = match &self.ckpt {
+            Some(ck) => (ck.dir.clone(), ck.keep),
+            None => return Ok(0.0),
+        };
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {dir:?}"))?;
+        let path = checkpoint::epoch_file(&dir, tag);
+        let sw = Stopwatch::new();
+        let (m, v, t) = self.opt.state();
+        checkpoint::save(&path, &self.params, m, v, t, self.cfg.train.grad_mode, tag)?;
+        let secs = sw.elapsed_secs();
+        checkpoint::prune(&dir, keep)?;
+        let ck = self.ckpt.as_mut().expect("checkpoint state present");
+        ck.last_epoch = Some(tag);
+        ck.virtual_since = 0.0;
+        ck.steps_since = 0;
+        Ok(secs)
+    }
+
+    /// Epochs completed so far (== the epoch tag the next
+    /// `train_epoch` call will run).
+    pub fn completed_epochs(&self) -> usize {
+        self.epoch_counter
+    }
+
+    /// Resume an interrupted run from the newest checkpoint in `dir`
+    /// (`kgscale train --resume <dir>`): restores params + optimizer
+    /// state and fast-forwards the epoch counter so the next
+    /// `train_epoch` continues where the interrupted run left off.
+    /// Returns the number of completed epochs.
+    pub fn resume_from_dir(&mut self, dir: &Path) -> Result<u64> {
+        let (tag, path) = checkpoint::latest(dir)?
+            .with_context(|| format!("no checkpoint found in {dir:?}"))?;
+        let saved = self.restore_checkpoint(&path)?;
+        anyhow::ensure!(
+            saved == tag,
+            "checkpoint {path:?} is tagged epoch {saved} inside but epoch {tag} by name"
+        );
+        self.epoch_counter = tag as usize;
+        // If this run also checkpoints into the same directory, the
+        // restored snapshot is its baseline — don't rewrite it.
+        if let Some(ck) = &mut self.ckpt {
+            if ck.dir == dir {
+                ck.last_epoch = Some(tag);
+                ck.virtual_since = 0.0;
+                ck.steps_since = 0;
+            }
+        }
+        crate::log_info!("resumed from {path:?}: {tag} epochs already complete");
+        Ok(tag)
     }
 
     /// Record an external evaluation point (Figure 7 series).
@@ -689,16 +961,27 @@ impl<'rt> Trainer<'rt> {
     }
 
     /// Save parameters + optimizer state, tagged with the gradient mode
-    /// so lazy-Adam moments are never silently resumed as dense ones.
+    /// (so lazy-Adam moments are never silently resumed as dense ones)
+    /// and the completed-epoch count.
     pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
         let (m, v, t) = self.opt.state();
-        checkpoint::save(path, &self.params, m, v, t, self.cfg.train.grad_mode)
+        checkpoint::save(
+            path,
+            &self.params,
+            m,
+            v,
+            t,
+            self.cfg.train.grad_mode,
+            self.epoch_counter as u64,
+        )
     }
 
-    /// Restore a checkpoint. `dense` and `sparse` states are
-    /// interchangeable (bit-identical paths); a `sparse_lazy` checkpoint
-    /// only resumes under `sparse_lazy`, and vice versa.
-    pub fn restore_checkpoint(&mut self, path: &Path) -> Result<()> {
+    /// Restore a checkpoint into params + optimizer state. `dense` and
+    /// `sparse` states are interchangeable (bit-identical paths); a
+    /// `sparse_lazy` checkpoint only resumes under `sparse_lazy`, and
+    /// vice versa. Returns the checkpoint's completed-epoch tag; the
+    /// epoch counter is *not* moved (that's `resume_from_dir`'s job).
+    pub fn restore_checkpoint(&mut self, path: &Path) -> Result<u64> {
         let ck = checkpoint::load(path)?;
         anyhow::ensure!(
             ck.params.len() == self.manifest.param_count,
@@ -706,18 +989,10 @@ impl<'rt> Trainer<'rt> {
             ck.params.len(),
             self.manifest.param_count
         );
-        let ck_lazy = ck.grad_mode == GradMode::SparseLazy;
-        let now_lazy = self.cfg.train.grad_mode == GradMode::SparseLazy;
-        anyhow::ensure!(
-            ck_lazy == now_lazy,
-            "checkpoint was written under grad_mode \"{}\" but this trainer runs \
-             \"{}\" — lazy-Adam moments are not interchangeable with dense ones",
-            ck.grad_mode.name(),
-            self.cfg.train.grad_mode.name()
-        );
+        checkpoint::check_grad_mode(ck.grad_mode, self.cfg.train.grad_mode)?;
         self.params = ck.params;
         self.opt.restore(ck.adam_m, ck.adam_v, ck.adam_t);
-        Ok(())
+        Ok(ck.epoch)
     }
 }
 

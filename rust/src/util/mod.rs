@@ -3,6 +3,7 @@
 //! the build is fully offline — see DESIGN.md.
 
 pub mod bench;
+pub mod hash;
 pub mod json;
 pub mod logging;
 pub mod pool;

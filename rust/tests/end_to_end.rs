@@ -325,6 +325,197 @@ fn gradient_mode_lazy_adam_tracks_dense_trajectory() {
     }
 }
 
+/// A process-unique scratch directory for checkpoint tests, cleared of
+/// any debris from a previous (crashed) run of the same test binary.
+fn temp_ckpt_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("kgscale-e2e-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Invariant 1 of the fault layer: `faults.enabled = false` is
+/// *bit-identical* to a config that never mentions `[faults]` at all —
+/// for every gradient mode and on both the sequential and pipelined
+/// host paths — and reports exactly-zero recovery metrics. The disabled
+/// configs carry aggressive rates to prove nothing leaks past the gate.
+#[test]
+fn fault_layer_disabled_is_bit_identical() {
+    let Some((runtime, manifest)) = artifacts() else { return };
+    let g = generator::generate(&ExperimentConfig::tiny().dataset);
+    let run = |mode: GradMode, threads: usize, hot_but_disabled: bool| {
+        let mut c = ExperimentConfig::tiny();
+        c.train.batch_edges = 64;
+        c.train.num_trainers = 2;
+        c.train.grad_mode = mode;
+        c.train.grad_sync = GradSync::Ring;
+        c.train.host_threads = threads;
+        c.train.prefetch_depth = 2;
+        if hot_but_disabled {
+            c.faults.enabled = false; // the gate under test
+            c.faults.crash_rate = 1.0;
+            c.faults.straggler_rate = 1.0;
+            c.faults.link_degrade_rate = 1.0;
+            c.faults.slowdown_factor = 16.0;
+            c.faults.link_degrade_factor = 16.0;
+        }
+        let mut t = Trainer::new(c, &g, &runtime, manifest.clone()).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..3 {
+            losses.push(t.train_epoch().unwrap().mean_loss);
+        }
+        let h = t.history.clone();
+        (losses, t.params, h)
+    };
+    for mode in [GradMode::Dense, GradMode::Sparse, GradMode::SparseLazy] {
+        let (base_losses, base_params, _) = run(mode, 0, false);
+        for threads in [0usize, 2] {
+            let (losses, params, h) = run(mode, threads, true);
+            assert_eq!(
+                base_losses, losses,
+                "{mode:?}, host_threads={threads}: disabled faults must not change losses"
+            );
+            assert_eq!(
+                base_params, params,
+                "{mode:?}, host_threads={threads}: disabled faults must not change params"
+            );
+            assert_eq!(h.total_recoveries(), 0);
+            assert_eq!(h.total_replayed_steps(), 0);
+            assert_eq!(h.total_recovery_secs(), 0.0);
+            assert_eq!(h.total_checkpoint_write_secs(), 0.0);
+            assert!(h.epochs.iter().all(|e| e.straggler_secs == 0.0));
+        }
+    }
+}
+
+/// Invariant 2: a run that crashes and recovers reproduces the
+/// *exact* fault-free loss/parameter trajectory. Crashes never corrupt
+/// the live replica (the survivors deterministically replay the lost
+/// worker's state); stragglers and link degradation only stretch the
+/// virtual clock. Also pins that the recovery metrics show up in
+/// `EpochRecord` and in the report table.
+#[test]
+fn crash_recovery_preserves_fault_free_trajectory() {
+    let Some((runtime, manifest)) = artifacts() else { return };
+    let g = generator::generate(&ExperimentConfig::tiny().dataset);
+    let base_cfg = || {
+        let mut c = ExperimentConfig::tiny();
+        c.train.batch_edges = 64;
+        c.train.num_trainers = 2;
+        c.train.grad_sync = GradSync::Ring;
+        c
+    };
+
+    // Fault-free reference.
+    let mut clean = Trainer::new(base_cfg(), &g, &runtime, manifest.clone()).unwrap();
+    let mut clean_losses = Vec::new();
+    for _ in 0..6 {
+        clean_losses.push(clean.train_epoch().unwrap().mean_loss);
+    }
+
+    // Same run under an aggressive fault plan with checkpointing on.
+    let dir = temp_ckpt_dir("faulted");
+    let mut c = base_cfg();
+    c.train.checkpoint_every_epochs = 2;
+    c.train.checkpoint_dir = dir.to_string_lossy().into_owned();
+    c.faults.enabled = true;
+    c.faults.seed = 0xFA17;
+    c.faults.crash_rate = 0.2;
+    c.faults.straggler_rate = 0.5;
+    c.faults.link_degrade_rate = 0.5;
+    c.validate().unwrap();
+    let mut faulted = Trainer::new(c, &g, &runtime, manifest.clone()).unwrap();
+    let mut faulted_losses = Vec::new();
+    for _ in 0..6 {
+        faulted_losses.push(faulted.train_epoch().unwrap().mean_loss);
+    }
+
+    assert_eq!(
+        clean_losses, faulted_losses,
+        "recovered run must reproduce the fault-free loss trajectory exactly"
+    );
+    assert_eq!(
+        clean.params, faulted.params,
+        "recovered run must reproduce the fault-free parameters bit-for-bit"
+    );
+
+    // The fault plan at these rates must actually have fired, and every
+    // recovery must carry its accounting.
+    let h = &faulted.history;
+    assert!(h.total_recoveries() > 0, "crash_rate 0.2 over 6 epochs never fired");
+    assert!(h.total_replayed_steps() > 0);
+    assert!(h.total_recovery_secs() > 0.0);
+    assert!(h.total_checkpoint_write_secs() > 0.0, "periodic checkpoints were never written");
+    assert!(h.epochs.iter().any(|e| e.straggler_secs > 0.0), "stragglers never fired");
+    for e in h.epochs.iter().filter(|e| e.fault_recoveries > 0) {
+        assert!(e.replayed_steps > 0 && e.recovery_secs > 0.0);
+    }
+    let table = kgscale::experiments::recovery_table(h, "e2e").to_markdown();
+    assert!(table.contains("crashes"), "recovery report missing: {table}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--resume`: restoring the newest checkpoint from disk and training
+/// onward is bit-identical to the uninterrupted run, and a grad-mode
+/// mismatch on resume is rejected loudly rather than silently mixing
+/// optimizer semantics.
+#[test]
+fn resume_from_disk_reproduces_uninterrupted_run() {
+    let Some((runtime, manifest)) = artifacts() else { return };
+    let g = generator::generate(&ExperimentConfig::tiny().dataset);
+    let dir = temp_ckpt_dir("resume");
+    let mk = |every: usize, mode: GradMode| {
+        let mut c = ExperimentConfig::tiny();
+        c.train.batch_edges = 64;
+        c.train.num_trainers = 2;
+        c.train.grad_sync = GradSync::Ring;
+        c.train.grad_mode = mode;
+        c.train.checkpoint_every_epochs = every;
+        if every > 0 {
+            c.train.checkpoint_dir = dir.to_string_lossy().into_owned();
+        }
+        Trainer::new(c, &g, &runtime, manifest.clone()).unwrap()
+    };
+
+    // Uninterrupted reference: 6 epochs straight through.
+    let mut a = mk(0, GradMode::Dense);
+    let mut a_losses = Vec::new();
+    for _ in 0..6 {
+        a_losses.push(a.train_epoch().unwrap().mean_loss);
+    }
+
+    // Interrupted run: 4 epochs (checkpoints at tags 0, 2, 4), then the
+    // process "dies" (trainer dropped) and a fresh one resumes.
+    let mut b = mk(2, GradMode::Dense);
+    for _ in 0..4 {
+        b.train_epoch().unwrap();
+    }
+    drop(b);
+    let mut b2 = mk(2, GradMode::Dense);
+    let resumed = b2.resume_from_dir(&dir).unwrap();
+    assert_eq!(resumed, 4, "latest checkpoint should be the epoch-4 boundary");
+    assert_eq!(b2.completed_epochs(), 4);
+    let mut b2_losses = Vec::new();
+    for _ in 0..2 {
+        b2_losses.push(b2.train_epoch().unwrap().mean_loss);
+    }
+    assert_eq!(
+        &a_losses[4..],
+        &b2_losses[..],
+        "resumed epochs must match the uninterrupted run bit-for-bit"
+    );
+    assert_eq!(a.params, b2.params, "resumed params must match bit-for-bit");
+
+    // Lazy Adam cannot adopt a dense/sparse snapshot: its skipped-step
+    // replay makes the optimizer state non-equivalent.
+    let mut lazy = mk(0, GradMode::SparseLazy);
+    let err = lazy.resume_from_dir(&dir).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("grad_mode"),
+        "mismatch error should name grad_mode: {err:#}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Under `grad_sync = "sparse"` the reported wire bytes follow the
 /// touched-row accounting exactly: touched entity rows × (dim·4 + 4
 /// index bytes) + touched relation rows × (dim·4 + 4) + the dense

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # Run the timing benches and collect machine-readable results at the
 # repo root: BENCH_optimizer.json, BENCH_epoch.json, BENCH_eval.json,
-# BENCH_partition.json. Each bench's synthetic part always runs; the
-# XLA-backed sections (train_epoch, Evaluator) need `make artifacts` to
-# have built artifacts/tiny first.
+# BENCH_partition.json, BENCH_recovery.json. Each bench's synthetic
+# part always runs; the XLA-backed sections (train_epoch, Evaluator,
+# faulted epochs) need `make artifacts` to have built artifacts/tiny
+# first.
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
@@ -21,7 +22,10 @@ BENCH_EVAL_JSON="$repo_root/BENCH_eval.json" cargo bench --bench eval
 echo "== partition bench =="
 BENCH_PARTITION_JSON="$repo_root/BENCH_partition.json" cargo bench --bench partition
 
+echo "== recovery bench =="
+BENCH_RECOVERY_JSON="$repo_root/BENCH_recovery.json" cargo bench --bench recovery
+
 echo "results:"
-for f in BENCH_optimizer.json BENCH_epoch.json BENCH_eval.json BENCH_partition.json; do
+for f in BENCH_optimizer.json BENCH_epoch.json BENCH_eval.json BENCH_partition.json BENCH_recovery.json; do
   echo "  $repo_root/$f"
 done
